@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: dataset, timing, CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.preprocess import preprocess_batch
+from repro.data.digits import make_digits
+
+_CACHE: dict = {}
+
+
+def digits_dataset(n_train=2000, n_test=1000, seed=1):
+    """Preprocessed (deskew + soft-threshold) procedural digit split."""
+    key = (n_train, n_test, seed)
+    if key not in _CACHE:
+        tr_img, tr_lab = make_digits(n_train, seed=seed)
+        te_img, te_lab = make_digits(n_test, seed=seed + 1)
+        tr = np.asarray(preprocess_batch(
+            jnp.asarray(tr_img.reshape(-1, 28, 28)), 0.1)).reshape(-1, 784)
+        te = np.asarray(preprocess_batch(
+            jnp.asarray(te_img.reshape(-1, 28, 28)), 0.1)).reshape(-1, 784)
+        _CACHE[key] = (tr, tr_lab, te, te_lab)
+    return _CACHE[key]
+
+
+def time_fn(fn, *args, reps=10, warmup=2):
+    """Median wall time (us) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

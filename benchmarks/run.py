@@ -1,0 +1,40 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+
+  table1_accuracy   Table 1  MNIST-recognition comparison row
+  fig5_neurons      Fig. 5   CA vs {10,20,40} output neurons
+  wexp_sweep        §3.3     w_exp {128,256,512} dead-neuron sweep
+  fig4_energy       Fig. 4   modeled power, fused vs decoupled
+  table2_resources  Table 2  state-footprint analogue of LUT/FF/BRAM
+  kernels_bench     §2.2     fused SNNU vs unfused SPU/NU/SU chain
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig4_energy, fig5_neurons, kernels_bench,
+                            table1_accuracy, table2_resources, wexp_sweep)
+
+    mods = [("table1_accuracy", table1_accuracy),
+            ("fig5_neurons", fig5_neurons),
+            ("wexp_sweep", wexp_sweep),
+            ("fig4_energy", fig4_energy),
+            ("table2_resources", table2_resources),
+            ("kernels_bench", kernels_bench)]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        mod.run()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro.checkpoint — sharded, async, elastic checkpointing."""
+
+from repro.checkpoint.checkpointer import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,21 @@
+"""repro.configs — assigned architecture configs + the paper's own SNN.
+
+Every module registers its config(s) on import; ``get_config(name)``
+and ``list_configs()`` are the public API.
+"""
+
+from repro.configs.base import (ArchConfig, LayerKind, get_config,
+                                layer_kinds, list_configs, reduced,
+                                register, scan_grouping)
+
+# Register all assigned architectures (import side effects).
+from repro.configs import (command_r_35b, gemma3_1b, grok1_314b,  # noqa: F401
+                           internvl2_26b, jamba_1_5_large_398b,
+                           llama3_405b, mixtral_8x22b, rwkv6_7b,
+                           starcoder2_3b, whisper_small)
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable_shapes  # noqa: F401
+from repro.configs.wenquxing_snn import WENQUXING_22A  # noqa: F401
+
+__all__ = ["ArchConfig", "LayerKind", "get_config", "layer_kinds",
+           "list_configs", "reduced", "register", "scan_grouping",
+           "SHAPES", "ShapeSpec", "applicable_shapes", "WENQUXING_22A"]

@@ -1,0 +1,59 @@
+"""Bit-packing for 1-bit synapses and spike vectors.
+
+Wenquxing 22A stores one synaptic row per neuron as 1-bit weights; the
+SPU ANDs the incoming spike vector against the row and counts survivors.
+On TPU we pack 32 synapses (or spikes) per ``uint32`` word so the whole
+row update is a handful of VPU lane ops.
+
+Convention: bit ``j`` of word ``w`` corresponds to flat index
+``w * 32 + j`` (little-endian within the word).  Tail bits past ``n`` are
+kept at 0 by every op in this module.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+
+def n_words(n_bits: int) -> int:
+    """Words needed for ``n_bits`` packed bits."""
+    return (n_bits + WORD_BITS - 1) // WORD_BITS
+
+
+def pack(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a {0,1} array (..., n) -> uint32 (..., n_words(n))."""
+    n = bits.shape[-1]
+    pad = n_words(n) * WORD_BITS - n
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1)
+    b = bits.astype(jnp.uint32).reshape(bits.shape[:-1] + (-1, WORD_BITS))
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(jnp.left_shift(b, shifts), axis=-1, dtype=jnp.uint32)
+
+
+def unpack(words: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Unpack uint32 (..., w) -> {0,1} int32 (..., n)."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = jnp.bitwise_and(
+        jnp.right_shift(words[..., :, None], shifts), jnp.uint32(1))
+    flat = bits.reshape(words.shape[:-1] + (-1,))
+    return flat[..., :n].astype(jnp.int32)
+
+
+def tail_mask(n: int) -> jnp.ndarray:
+    """uint32[n_words(n)] with ones only in valid bit positions."""
+    w = n_words(n)
+    idx = np.arange(w * WORD_BITS).reshape(w, WORD_BITS)
+    valid = (idx < n).astype(np.uint64)
+    vals = (valid << np.arange(WORD_BITS, dtype=np.uint64)).sum(axis=1)
+    return jnp.asarray(vals.astype(np.uint32))
+
+
+def popcount(words: jnp.ndarray, axis=-1) -> jnp.ndarray:
+    """Total set bits along ``axis`` (int32)."""
+    import jax.lax as lax
+    return jnp.sum(lax.population_count(words).astype(jnp.int32), axis=axis)

@@ -1,0 +1,44 @@
+"""Rate-based Poisson spike encoder (paper §3.1).
+
+"To generate the spike, we set a firing probability of a time cycle:
+P = x, where x needs to be normalized to [0,1]" — i.e. each pixel fires
+as an independent Bernoulli(intensity) per time cycle.  The encoder
+outputs *packed* uint32 spike words (the SPU's native operand).
+
+Randomness note (DESIGN.md §7): the paper's encoder runs on-core; its RNG
+is unspecified, so we use JAX's counter-based PRNG here (statistical
+fidelity), reserving the bit-exact LFSR for the LTD path where the paper
+specifies it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitpack import pack
+
+
+def poisson_encode(key: jax.Array, intensities: jnp.ndarray,
+                   n_steps: int) -> jnp.ndarray:
+    """Encode normalized intensities [n] -> packed spikes uint32[T, w].
+
+    intensities: float32 in [0, 1] (pixel value / 255 after preprocessing).
+    """
+    n = intensities.shape[-1]
+    u = jax.random.uniform(key, (n_steps, n))
+    bits = (u < intensities[None, :]).astype(jnp.uint32)
+    return pack(bits)
+
+
+def poisson_encode_batch(key: jax.Array, batch: jnp.ndarray,
+                         n_steps: int) -> jnp.ndarray:
+    """[B, n] intensities -> uint32[B, T, w] packed spike trains."""
+    keys = jax.random.split(key, batch.shape[0])
+    return jax.vmap(lambda k, x: poisson_encode(k, x, n_steps))(keys, batch)
+
+
+def spike_rate(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Mean firing rate per input across time.  packed: uint32[T, w]."""
+    from repro.core.bitpack import unpack
+    return jnp.mean(unpack(packed, n).astype(jnp.float32), axis=0)

@@ -1,0 +1,59 @@
+"""16-bit Fibonacci LFSR, bit-exact with the Wenquxing 22A hardware PRNG.
+
+The paper's LTD unit draws a random 10-bit number ``x`` from a 16-bit
+LFSR each LTD decision and clears the synapse iff
+``x <= ltd_probability``.  Hardware has a single LFSR; a data-parallel TPU
+wants one independent stream per neuron lane, so every function here is
+vectorized over a ``uint32`` array of per-lane 16-bit states (stored in
+uint32 because TPUs have no native u16 ALU lanes; the high 16 bits are
+kept zero).
+
+Taps: x^16 + x^14 + x^13 + x^11 + 1 (the classic maximal-length 16-bit
+polynomial, period 65535).  State 0 is absorbing and therefore forbidden;
+seeding guards against it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Feedback taps as right-shift amounts in the Fibonacci form
+# (tap t of the polynomial reads register bit 16 - t).
+_TAP_SHIFTS = (0, 2, 3, 5)  # taps 16, 14, 13, 11
+
+LFSR_PERIOD = (1 << 16) - 1
+
+
+def seed(base: int, n: int) -> jnp.ndarray:
+    """Produce ``n`` distinct nonzero 16-bit LFSR states from ``base``.
+
+    Uses a Weyl sequence on the odd constant 0x9E37 (golden-ratio hash
+    truncated to 16 bits) so lanes are decorrelated, then maps 0 -> 0xACE1
+    (the traditional LFSR example seed) to avoid the absorbing state.
+    """
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    s = (jnp.uint32(base & 0xFFFF) + idx * jnp.uint32(0x9E37)) & jnp.uint32(0xFFFF)
+    return jnp.where(s == 0, jnp.uint32(0xACE1), s)
+
+
+def step(state: jnp.ndarray) -> jnp.ndarray:
+    """Advance every lane one LFSR step.  state: uint32[..., n] -> same."""
+    fb = jnp.zeros_like(state)
+    for sh in _TAP_SHIFTS:
+        fb = jnp.bitwise_xor(fb, jnp.right_shift(state, jnp.uint32(sh)))
+    fb = jnp.bitwise_and(fb, jnp.uint32(1))
+    return jnp.bitwise_and(
+        jnp.bitwise_or(jnp.right_shift(state, jnp.uint32(1)),
+                       jnp.left_shift(fb, jnp.uint32(15))),
+        jnp.uint32(0xFFFF),
+    )
+
+
+def draw10(state: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One LTD draw per lane: advance the LFSR, return (new_state, x).
+
+    ``x`` is the low 10 bits of the new state, in [0, 1023], matching the
+    paper's "random 10-bit number x ... compare with the LTD probability".
+    """
+    new = step(state)
+    return new, jnp.bitwise_and(new, jnp.uint32(0x3FF))

@@ -1,0 +1,52 @@
+"""Streamlined Leaky Integrate-and-Fire (LIF) — paper contribution C2.
+
+The paper streamlines the standard LIF ODE into an integer datapath that
+fits a single execution-stage cycle:
+
+    V' = V + count            # integrate this cycle's valid-spike count
+    fire = V' >= threshold
+    V  <- 0           if fire            # hard reset
+    V  <- max(V' - leak, 0)  otherwise   # single-subtraction leak, floor 0
+
+``count`` is the SPU popcount output (non-negative).  All state is int32.
+A teacher current (supervised learning, §3.1) is simply added to
+``count`` before the update — the hardware injects it on the same adder.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class LIFParams(NamedTuple):
+    threshold: jnp.ndarray  # int32 scalar or [n]
+    leak: jnp.ndarray       # int32 scalar or [n]
+
+
+def lif_params(threshold: int, leak: int) -> LIFParams:
+    return LIFParams(jnp.int32(threshold), jnp.int32(leak))
+
+
+def lif_step(v: jnp.ndarray, count: jnp.ndarray, p: LIFParams
+             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One streamlined-LIF cycle.
+
+    v: int32[n] membrane potentials; count: int32[n] valid-spike counts
+    (may include teacher current, possibly negative for inhibition).
+    Returns (v_next int32[n], fired bool[n]).
+    """
+    v_int = v + count
+    fired = v_int >= p.threshold
+    v_next = jnp.where(
+        fired,
+        jnp.int32(0),
+        jnp.maximum(v_int - p.leak, jnp.int32(0)),
+    )
+    return v_next, fired
+
+
+def lif_reset(n: int) -> jnp.ndarray:
+    """Fresh membrane state (the paper resets V between samples)."""
+    return jnp.zeros((n,), jnp.int32)

@@ -1,0 +1,85 @@
+"""SNN network execution: lax.scan over time cycles (paper §3.1 network).
+
+The paper's network is a single fully-connected layer of LIF neurons fed
+by Poisson-encoded input spikes; training is online (weights change every
+cycle), inference counts output spikes over the presentation window.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFParams
+from repro.core.rvsnn import SnnRegFile, snn_regfile, snn_step
+from repro.core.stdp import STDPParams
+
+
+class SNNOutput(NamedTuple):
+    regfile: SnnRegFile
+    spike_counts: jnp.ndarray  # int32[n] output spikes over the window
+    fired: jnp.ndarray         # bool[T, n] raster
+
+
+def run_sample(
+    rf: SnnRegFile,
+    spike_train: jnp.ndarray,   # uint32[T, w] packed input spikes
+    lif: LIFParams,
+    stdp: STDPParams | None = None,
+    teach: jnp.ndarray | None = None,
+) -> SNNOutput:
+    """Present one sample for T cycles.  stdp=None -> inference."""
+
+    def body(carry: SnnRegFile, words: jnp.ndarray):
+        carry, fired = snn_step(carry, words, lif, stdp, teach)
+        return carry, fired
+
+    rf_out, fired = jax.lax.scan(body, rf, spike_train)
+    counts = jnp.sum(fired.astype(jnp.int32), axis=0)
+    return SNNOutput(rf_out, counts, fired)
+
+
+def reset_between_samples(rf: SnnRegFile) -> SnnRegFile:
+    """Clear membrane + spike registers, keep weights and LFSR (paper
+    resets neuron state between digit presentations)."""
+    return rf._replace(
+        v=jnp.zeros_like(rf.v),
+        spike=jnp.zeros_like(rf.spike),
+    )
+
+
+def infer_batch(
+    weights: jnp.ndarray,       # uint32[n, w]
+    spike_trains: jnp.ndarray,  # uint32[B, T, w]
+    lif: LIFParams,
+) -> jnp.ndarray:
+    """Spike counts int32[B, n] for a batch (weights frozen, vmapped)."""
+    rf0 = snn_regfile(weights)
+
+    def one(train):
+        return run_sample(reset_between_samples(rf0), train, lif).spike_counts
+
+    return jax.vmap(one)(spike_trains)
+
+
+def train_stream(
+    rf: SnnRegFile,
+    spike_trains: jnp.ndarray,  # uint32[N, T, w] pre-encoded samples
+    teach: jnp.ndarray,         # int32[N, n] per-sample teacher currents
+    lif: LIFParams,
+    stdp: STDPParams,
+) -> tuple[SnnRegFile, jnp.ndarray]:
+    """Online STDP over a stream of samples (sequential, as in hardware).
+
+    Returns (rf', spike_counts int32[N, n]).
+    """
+
+    def body(carry: SnnRegFile, inp):
+        train, tch = inp
+        carry = reset_between_samples(carry)
+        out = run_sample(carry, train, lif, stdp, tch)
+        return out.regfile, out.spike_counts
+
+    return jax.lax.scan(body, rf, (spike_trains, teach))

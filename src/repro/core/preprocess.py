@@ -1,0 +1,63 @@
+"""MNIST-style preprocessing from the paper §3.1: deskew + soft threshold.
+
+Both are "common practices for small networks" (paper's words) and are
+executed on-processor in Wenquxing 22A; here they are pure-jnp image ops
+applied before Poisson encoding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _image_moments(img: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Centroid and second-order row/col covariance of a 2-D image."""
+    h, w = img.shape
+    total = jnp.sum(img) + 1e-6
+    ys = jnp.arange(h, dtype=jnp.float32)[:, None]
+    xs = jnp.arange(w, dtype=jnp.float32)[None, :]
+    cy = jnp.sum(ys * img) / total
+    cx = jnp.sum(xs * img) / total
+    # mixed moment / row variance -> shear coefficient
+    mu_yy = jnp.sum((ys - cy) ** 2 * img) / total
+    mu_xy = jnp.sum((ys - cy) * (xs - cx) * img) / total
+    return cy, cx, mu_xy / (mu_yy + 1e-6)
+
+
+def deskew(img: jnp.ndarray) -> jnp.ndarray:
+    """Shear the image so its principal vertical axis is upright.
+
+    Classic MNIST deskew: estimate the shear ``alpha`` from image moments
+    and resample ``x' = x + alpha * (y - cy)`` with bilinear interpolation.
+    img: float32[h, w] in [0, 1].
+    """
+    h, w = img.shape
+    cy, cx, alpha = _image_moments(img)
+    ys = jnp.arange(h, dtype=jnp.float32)[:, None]
+    xs = jnp.arange(w, dtype=jnp.float32)[None, :]
+    src_x = xs + alpha * (ys - cy)
+    x0 = jnp.floor(src_x)
+    frac = src_x - x0
+    x0i = jnp.clip(x0.astype(jnp.int32), 0, w - 1)
+    x1i = jnp.clip(x0i + 1, 0, w - 1)
+    rows = jnp.broadcast_to(jnp.arange(h)[:, None], (h, w))
+    left = img[rows, x0i]
+    right = img[rows, x1i]
+    out = left * (1.0 - frac) + right * frac
+    inb = (src_x >= 0) & (src_x <= w - 1)
+    return jnp.where(inb, out, 0.0)
+
+
+def soft_threshold(img: jnp.ndarray, thresh: float = 0.1) -> jnp.ndarray:
+    """Soft-threshold shrinkage: max(x - t, 0) rescaled back to [0, 1]."""
+    out = jnp.maximum(img - thresh, 0.0)
+    return out / (1.0 - thresh)
+
+
+def preprocess(img: jnp.ndarray, thresh: float = 0.1) -> jnp.ndarray:
+    """Full paper pipeline: deskew then soft threshold.  [h,w] -> [h,w]."""
+    return soft_threshold(deskew(img), thresh)
+
+
+preprocess_batch = jax.vmap(preprocess, in_axes=(0, None))

@@ -1,0 +1,122 @@
+"""Binary stochastic STDP — paper contribution C3.
+
+Semantics reconstructed from §2.2 of the paper (SU = LTP unit + LTD
+unit), geared to "single cycle updating of synaptic weights":
+
+On a post-synaptic spike of neuron ``i`` (and only then):
+
+* **LTP** (deterministic): every synapse whose pre-synaptic input spiked
+  this cycle is set to 1 — ``w[i] |= pre_spikes``.
+* **LTD** (stochastic): a 10-bit draw ``x`` from a 16-bit LFSR is
+  compared against ``ltd_prob``; if ``x <= ltd_prob`` the non-coincident
+  synapses are cleared — ``w[i] &= pre_spikes`` for the words whose draw
+  passed.
+
+Granularity assumption (recorded in DESIGN.md §7): hardware holds one
+LFSR; updating a 784-synapse row in one cycle cannot draw 784 independent
+numbers, so the depress decision is made **per 32-synapse word**, one
+LFSR lane per (neuron, word).  This preserves the paper's dynamics — the
+expected fraction of non-coincident synapses cleared per post-spike is
+``p_ltd`` — while mapping 1:1 onto packed uint32 lanes.
+
+``w_exp`` (paper §3.3, values {128, 256, 512}) "affects the number of
+effective synapses that ultimately remain by changing the LTD
+probability".  We implement that statement directly as a homeostatic
+rule: the LTD probability of a row grows with the excess of its ON-count
+over the ``w_exp`` budget (the SPU already produces row popcounts, so
+this costs the hardware one subtract+clamp):
+
+    p_ltd(row) = clamp((popcount(row) - w_exp) * gain * 1024 / n_syn,
+                       0, 1023) / 1024
+
+At equilibrium each row keeps ~``w_exp`` synapses — the ones most
+frequently coincident with the neuron's post-spikes — which also
+equalizes rows for the output argmax competition.  Higher ``w_exp`` =>
+lower LTD pressure => more synapses survive, exactly the paper's knob.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+import jax.lax as lax
+
+from repro.core import lfsr as _lfsr
+
+
+class STDPParams(NamedTuple):
+    w_exp: jnp.ndarray     # int32: effective-synapse budget {128,256,512}
+    gain: jnp.ndarray      # int32: homeostatic gain (LTD slope)
+    n_syn: jnp.ndarray     # int32: synapses per row (for normalization)
+    ltp_prob: jnp.ndarray  # uint32: 10-bit stochastic-LTP probability
+
+
+def stdp_params(n_syn: int, w_exp: int, gain: int = 4,
+                ltp_prob: int = 1023) -> STDPParams:
+    """ltp_prob < 1023 slows acquisition (stochastic LTP a la Yousefzadeh
+    2018 [13], the paper's 1-bit STDP reference): a potentiation event
+    only fires with probability (ltp_prob+1)/1024, so the learned row is
+    a long-horizon average over samples instead of a copy of the most
+    recent one."""
+    return STDPParams(jnp.int32(w_exp), jnp.int32(gain), jnp.int32(n_syn),
+                      jnp.uint32(ltp_prob))
+
+
+def ltd_prob(row_popcount: jnp.ndarray, p: STDPParams) -> jnp.ndarray:
+    """Homeostatic 10-bit LTD probability per row.  int32[n] -> uint32[n]."""
+    excess = (row_popcount - p.w_exp) * p.gain * 1024 // p.n_syn
+    return jnp.clip(excess, 0, 1023).astype(jnp.uint32)
+
+
+def ltd_prob_from_wexp(n_syn: int, w_exp: int, popcount: int | None = None,
+                       gain: int = 4) -> int:
+    """Scalar helper (tests/benchmarks): LTD prob for a given ON-count."""
+    pc = n_syn if popcount is None else popcount
+    return int(min(1023, max(0, (pc - w_exp) * gain * 1024 // n_syn)))
+
+
+def stdp_update(
+    weights: jnp.ndarray,      # uint32[n, w] packed 1-bit synapses
+    pre_spikes: jnp.ndarray,   # uint32[w] packed spike vector (this cycle)
+    post_fired: jnp.ndarray,   # bool[n]
+    lfsr_state: jnp.ndarray,   # uint32[n, w] per-lane LFSR states
+    p: STDPParams,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-pass LTP+LTD row update.  Returns (weights', lfsr_state').
+
+    The LFSR advances only for rows whose neuron fired, matching hardware
+    (the SU is clocked per post-spike event).
+    """
+    fired_u = post_fired[:, None]  # [n, 1] broadcast over words
+    # Two LFSR draws per update event: one for LTP, one for LTD (the
+    # hardware clocks the LFSR twice per SU op; see DESIGN.md §7).
+    s1, x_ltp = _lfsr.draw10(lfsr_state)
+    s2, x_ltd = _lfsr.draw10(s1)
+    lfsr_out = jnp.where(fired_u, s2, lfsr_state)
+
+    potentiate = x_ltp <= p.ltp_prob  # bool[n, w]
+    ltp = jnp.where(potentiate,
+                    jnp.bitwise_or(weights, pre_spikes[None, :]), weights)
+    pc = jnp.sum(lax.population_count(ltp).astype(jnp.int32), axis=-1)
+    prob = ltd_prob(pc, p)  # uint32[n]
+    depress = x_ltd <= prob[:, None]  # bool[n, w], one decision per word
+    ltd = jnp.where(depress, jnp.bitwise_and(ltp, pre_spikes[None, :]), ltp)
+    w_out = jnp.where(fired_u, ltd, weights)
+    return w_out, lfsr_out
+
+
+def init_weights(n_neurons: int, n_words: int, density_seed: int = 0,
+                 dense: bool = True) -> jnp.ndarray:
+    """Initial synaptic matrix.  The paper starts from all-ON rows (LTP
+    only ever sets bits; learning proceeds by stochastic pruning), which
+    ``dense=True`` reproduces; ``dense=False`` gives a ~50% random init
+    for ablations."""
+    if dense:
+        return jnp.full((n_neurons, n_words), 0xFFFFFFFF, jnp.uint32)
+    s = _lfsr.seed(density_seed ^ 0xBEEF, n_neurons * n_words)
+    s = _lfsr.step(_lfsr.step(s))
+    lo = jnp.bitwise_and(s, jnp.uint32(0xFFFF))
+    hi = jnp.left_shift(_lfsr.step(s) & jnp.uint32(0xFFFF), jnp.uint32(16))
+    return jnp.bitwise_or(hi, lo).reshape(n_neurons, n_words)

@@ -1,0 +1,137 @@
+"""Supervised STDP trainer + "Active learning" (paper §3.1).
+
+10-neuron network: one neuron per digit class; a teacher current drives
+the labeled neuron while the others are held at low activity (inhibited).
+
+>10-neuron networks ("Active learning"): train 10 neurons, evaluate on
+the training set, collect the misclassified samples, then train a fresh
+block of 10 neurons *on the error samples only*, supervised by their
+labels; repeat until the target population size.  Classification is by
+the class of the maximally-firing neuron across all blocks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import network
+from repro.core.bitpack import n_words
+from repro.core.encoder import poisson_encode_batch
+from repro.core.lif import LIFParams, lif_params
+from repro.core.rvsnn import snn_regfile
+from repro.core.stdp import STDPParams, init_weights, stdp_params
+
+
+@dataclass(frozen=True)
+class SNNTrainConfig:
+    n_inputs: int = 784
+    n_classes: int = 10
+    n_neurons: int = 40          # total population (multiple of n_classes)
+    n_steps: int = 72            # presentation window T (cycles/sample)
+    threshold: int = 192         # streamlined-LIF firing threshold
+    leak: int = 16               # per-cycle leak
+    w_exp: int = 128             # paper meta-parameter {128, 256, 512}
+    gain: int = 4                # homeostatic LTD slope
+    ltp_prob: int = 16           # 10-bit stochastic-LTP prob (base block)
+    ltp_prob_active: int = 1023  # faster LTP for active-learning blocks
+                                 # (few, hard samples -> specialize)
+    teach_pos: int = 64          # teacher current into the labeled neuron
+    teach_neg: int = -1024       # inhibition into the others
+    epochs: int = 2
+    seed: int = 0x22A
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.n_neurons % self.n_classes == 0
+        return self.n_neurons // self.n_classes
+
+    @property
+    def words(self) -> int:
+        return n_words(self.n_inputs)
+
+    def lif(self) -> LIFParams:
+        return lif_params(self.threshold, self.leak)
+
+    def stdp(self, block_idx: int = 0) -> STDPParams:
+        lp = self.ltp_prob if block_idx == 0 else self.ltp_prob_active
+        return stdp_params(self.n_inputs, self.w_exp, self.gain, lp)
+
+
+@dataclass
+class SNNModel:
+    """Trained population: packed weights + per-neuron class labels."""
+    weights: jnp.ndarray           # uint32[n_neurons, w]
+    neuron_class: jnp.ndarray      # int32[n_neurons]
+    cfg: SNNTrainConfig = field(repr=False, default=None)
+
+
+def _teacher(labels: jnp.ndarray, cfg: SNNTrainConfig) -> jnp.ndarray:
+    """int32[N, n_classes] teacher currents for a 10-neuron block."""
+    onehot = jax.nn.one_hot(labels, cfg.n_classes, dtype=jnp.int32)
+    return onehot * cfg.teach_pos + (1 - onehot) * cfg.teach_neg
+
+
+def _train_block(cfg: SNNTrainConfig, key: jax.Array,
+                 spike_trains: jnp.ndarray, labels: jnp.ndarray,
+                 block_idx: int) -> jnp.ndarray:
+    """Train one 10-neuron block online over (possibly repeated) samples."""
+    w0 = init_weights(cfg.n_classes, cfg.words, dense=True)
+    rf = snn_regfile(w0, seed=cfg.seed + 17 * block_idx)
+    teach = _teacher(labels, cfg)
+    step = jax.jit(network.train_stream, static_argnums=())
+    for _ in range(cfg.epochs):
+        rf, _ = step(rf, spike_trains, teach, cfg.lif(), cfg.stdp(block_idx))
+    return rf.weights
+
+
+def classify(model: SNNModel, spike_trains: jnp.ndarray) -> jnp.ndarray:
+    """Predicted class int32[B]: class of the maximally-firing neuron."""
+    counts = network.infer_batch(model.weights, spike_trains, model.cfg.lif())
+    best = jnp.argmax(counts, axis=-1)
+    return model.neuron_class[best]
+
+
+def accuracy(model: SNNModel, spike_trains: jnp.ndarray,
+             labels: jnp.ndarray) -> float:
+    pred = classify(model, spike_trains)
+    return float(jnp.mean((pred == labels).astype(jnp.float32)))
+
+
+def train(cfg: SNNTrainConfig, images: np.ndarray, labels: np.ndarray,
+          key: jax.Array | None = None) -> SNNModel:
+    """Full active-learning training.
+
+    images: float32[N, n_inputs] normalized (already preprocessed);
+    labels: int[N].
+    """
+    if key is None:
+        key = jax.random.key(cfg.seed)
+    key, ek = jax.random.split(key)
+    spike_trains = poisson_encode_batch(
+        ek, jnp.asarray(images, jnp.float32), cfg.n_steps)
+    labels_j = jnp.asarray(labels, jnp.int32)
+
+    blocks: list[jnp.ndarray] = []
+    classes: list[jnp.ndarray] = []
+    cur_trains, cur_labels = spike_trains, labels_j
+    for b in range(cfg.n_blocks):
+        key, bk = jax.random.split(key)
+        blocks.append(_train_block(cfg, bk, cur_trains, cur_labels, b))
+        classes.append(jnp.arange(cfg.n_classes, dtype=jnp.int32))
+        if b + 1 == cfg.n_blocks:
+            break
+        # Active learning: next block trains on this ensemble's errors.
+        model = SNNModel(jnp.concatenate(blocks, axis=0),
+                         jnp.concatenate(classes), cfg)
+        pred = classify(model, spike_trains)
+        err = np.asarray(pred != labels_j)
+        if not err.any():
+            break
+        cur_trains = spike_trains[np.where(err)[0]]
+        cur_labels = labels_j[np.where(err)[0]]
+    return SNNModel(jnp.concatenate(blocks, axis=0),
+                    jnp.concatenate(classes), cfg)

@@ -1,0 +1,12 @@
+"""repro.data — data pipelines.
+
+digits:    procedural 28x28 digit dataset (offline MNIST substitute)
+synthetic: token streams for LM training/serving
+loader:    sharded, step-indexed host loader with prefetch + resume
+"""
+
+from repro.data.digits import make_digits
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import SyntheticTokens
+
+__all__ = ["make_digits", "ShardedLoader", "SyntheticTokens"]

@@ -1,0 +1,8 @@
+"""repro.distributed — sharding rules, collectives, pipeline schedule."""
+
+from repro.distributed.sharding import (constrain, current_mesh,
+                                        logical_spec, named_sharding,
+                                        use_mesh)
+
+__all__ = ["constrain", "current_mesh", "logical_spec", "named_sharding",
+           "use_mesh"]

@@ -1,0 +1,105 @@
+"""Pipeline parallelism: GPipe-style microbatch schedule over shard_map.
+
+An optional parallelism axis for the deepest architectures (llama3's
+126 layers): the layer stack is split into S stages laid out on a mesh
+axis; microbatches flow stage-to-stage with
+``jax.lax.ppermute`` (the TPU-native point-to-point collective), giving
+the classic (S - 1 + M) step schedule with bubble fraction
+(S-1)/(S-1+M).
+
+This module is deliberately self-contained (stage_fn is any pure
+function) so it composes with the transformer stack: pass the
+super-block apply as ``stage_fn`` and stage-stacked params.  Used by
+tests/test_pipeline.py and available to launch/train.py as a config
+switch; the dry-run's default recipe keeps FSDP+TP (DESIGN.md §5) —
+pipeline becomes profitable on real hardware when TP collectives
+saturate ICI, which the §Roofline table identifies per arch.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_schedule(stage_fn, n_stages: int, n_micro: int,
+                      axis_name: str = "stage"):
+    """Build a pipelined forward usable under shard_map.
+
+    stage_fn(stage_params, x) -> y : one stage's compute.
+    Returns fn(stage_params, micro_x) -> micro_y where, PER DEVICE
+    (inside shard_map over ``axis_name``):
+      stage_params: this stage's params;
+      micro_x: [M, ...] all microbatches (only stage 0's input is real);
+      micro_y: [M, ...] outputs (only the LAST stage's are real).
+
+    The schedule runs T = M + S - 1 ticks; at tick t, stage s computes
+    microbatch (t - s) if 0 <= t - s < M.  Data moves s -> s+1 with a
+    single ppermute per tick.
+    """
+
+    def run(stage_params, micro_x):
+        s = jax.lax.axis_index(axis_name)
+        m = micro_x.shape[0]
+        ticks = m + n_stages - 1
+        # carries become device-varying inside the scan; mark them so
+        buf = jax.lax.pcast(jnp.zeros_like(micro_x[0]), (axis_name,),
+                            to="varying")          # inflight activation
+        out = jax.lax.pcast(jnp.zeros_like(micro_x), (axis_name,),
+                            to="varying")
+
+        def tick(carry, t):
+            buf, out = carry
+            # stage 0 ingests microbatch t; others use the ppermuted buf
+            inject = jnp.where(t < m, t, m - 1)
+            x_in = jnp.where(s == 0, micro_x[inject], buf)
+            active = (t - s >= 0) & (t - s < m)
+            y = stage_fn(stage_params, x_in)
+            y = jnp.where(active, y, buf)
+            # last stage writes its finished microbatch (masked write —
+            # lax.cond branches would disagree on shard_map vma types)
+            widx = jnp.clip(t - s, 0, m - 1)
+            write = active & (s == n_stages - 1)
+            out = out.at[widx].set(jnp.where(write, y, out[widx]))
+            # shift activations one stage forward
+            buf = jax.lax.ppermute(
+                y, axis_name,
+                perm=[(i, i + 1) for i in range(n_stages - 1)])
+            return (buf, out), None
+
+        (buf, out), _ = jax.lax.scan(tick, (buf, out),
+                                     jnp.arange(ticks))
+        return out
+
+    return run
+
+
+def pipelined_apply(mesh: Mesh, stage_fn, stage_params, micro_x,
+                    axis_name: str = "stage"):
+    """Convenience wrapper: shard_map the schedule over ``axis_name``.
+
+    stage_params: leading axis = n_stages (one slice per stage).
+    micro_x: [M, ...] microbatches, replicated across stages.
+    Returns [M, ...] outputs from the last stage (replicated).
+    """
+    n_stages = mesh.shape[axis_name]
+    run = pipeline_schedule(stage_fn, n_stages, micro_x.shape[0],
+                            axis_name)
+
+    def wrapped(sp, mx):
+        out = run(jax.tree.map(lambda a: a[0], sp), mx)
+        # broadcast the last stage's result to all stages (masked psum)
+        s = jax.lax.axis_index(axis_name)
+        last = jax.lax.psum(
+            jnp.where(s == n_stages - 1, out, jnp.zeros_like(out)),
+            axis_name)
+        return last
+
+    return jax.shard_map(
+        wrapped, mesh=mesh,
+        in_specs=(P(axis_name), P()),
+        out_specs=P(),
+    )(stage_params, micro_x)

@@ -1,0 +1,147 @@
+"""Logical-axis sharding: models annotate tensors with logical names;
+a rules table maps them to mesh axes (or None = replicated).
+
+Models call ``constrain(x, "batch", "seq", "embed")`` at layer
+boundaries; outside a ``use_mesh`` context this is the identity, inside
+it becomes ``with_sharding_constraint`` — so the same model code runs
+single-device (tests), and SPMD (dry-run / production) without edits.
+
+Rules are plain dicts so the dry-run can swap entire strategies (e.g.
+heads-TP vs sequence-parallel attention) per architecture x shape; see
+DEFAULT_RULES / SEQPAR_RULES below and repro.launch.dryrun.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# Logical axis -> mesh axis (str | tuple | None).
+DEFAULT_RULES: dict = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,              # input token sequence axis
+    "res_seq": "model",       # residual-stream seq axis (Megatron-SP:
+                              # layer-scan carries shrink 16x; XLA turns
+                              # the TP all-reduces into RS+AG pairs)
+    "mix_seq": None,          # seq axis of matmul INPUTS: gathered for
+                              # heads-TP (so dW psums span data only and
+                              # per-layer grad buffers stay 1/TP-sized),
+                              # model-sharded for seq-parallel archs
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "qkv": "model",           # fused qkv output dim (heads packed)
+    "ffn": "model",
+    "experts": None,
+    "vocab": "model",         # logits vocab axis
+    "kv_seq": "model",        # decode KV-cache sequence axis
+    "frames": None,
+    # parameters (FSDP-style: second axis over data where large)
+    "p_vocab": ("pod", "data"),
+    "p_embed": "model",
+    "p_in": ("pod", "data"),  # contracting dim of weight matrices
+    "p_out": "model",         # output dim (heads/ffn packed)
+    "p_experts": None,
+    "layers": None,           # stacked-layer leading axis
+}
+
+# Sequence-parallel attention variant: for archs whose head counts do not
+# divide the model axis (gemma3 4H, whisper 12H, starcoder2 24H).
+SEQPAR_RULES_OVERRIDES: dict = {
+    "heads": None,
+    "qkv": None,
+    "seq": "model",
+    "res_seq": "model",
+    "mix_seq": "model",
+    "p_out": "model",  # weights still shard on the packed output dim
+}
+
+
+def use_rules(base: dict | None = None, **overrides) -> dict:
+    r = dict(DEFAULT_RULES if base is None else base)
+    r.update(overrides)
+    return r
+
+
+@contextmanager
+def use_mesh(mesh: Mesh, rules: dict | None = None):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, dict(DEFAULT_RULES if rules is None else rules))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> tuple[Mesh, dict] | None:
+    return getattr(_state, "ctx", None)
+
+
+def _resolve(rules: dict, mesh: Mesh, names: tuple) -> P:
+    axes = []
+    used: set = set()
+    for nm in names:
+        ax = rules.get(nm) if nm is not None else None
+        if ax is None:
+            axes.append(None)
+            continue
+        cand = ax if isinstance(ax, tuple) else (ax,)
+        # keep only axes present in this mesh and not already used
+        cand = tuple(a for a in cand if a in mesh.shape and a not in used)
+        used.update(cand)
+        axes.append(cand if len(cand) > 1 else (cand[0] if cand else None))
+    return P(*axes)
+
+
+def logical_spec(names: tuple, rules: dict | None = None,
+                 mesh: Mesh | None = None) -> P:
+    ctx = current_mesh()
+    if mesh is None or rules is None:
+        if ctx is None:
+            raise RuntimeError("no active mesh; use use_mesh(...)")
+        mesh = mesh or ctx[0]
+        rules = rules or ctx[1]
+    return _resolve(rules, mesh, names)
+
+
+def named_sharding(mesh: Mesh, rules: dict, names: tuple) -> NamedSharding:
+    return NamedSharding(mesh, _resolve(rules, mesh, names))
+
+
+def _divisible(mesh: Mesh, spec: P, shape: tuple) -> bool:
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if dim % n != 0:
+            return False
+    return True
+
+
+def constrain(x: jax.Array, *names):
+    """Annotate ``x`` with logical axis names (identity w/o a mesh)."""
+    ctx = current_mesh()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = _resolve(rules, mesh, names)
+    if not _divisible(mesh, spec, x.shape):
+        # drop non-divisible axes rather than failing mid-model; the
+        # dry-run surfaces the resulting (replicated) memory cost.
+        spec = P(*[
+            ax if ax is not None and _divisible(
+                mesh, P(*[None] * i + [ax] + [None] * (x.ndim - i - 1)),
+                x.shape) else None
+            for i, ax in enumerate(spec)])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))

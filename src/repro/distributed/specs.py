@@ -1,0 +1,154 @@
+"""Logical-axis spec trees for params and caches.
+
+Maps every parameter / cache leaf to a tuple of logical axis names
+(resolved against a rules table by repro.distributed.sharding).  Driven
+by leaf *path names*, so it stays in sync with the model's param
+structure without the model having to carry annotations.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# last-path-key -> logical names (unstacked form)
+_PARAM_TABLE: dict[str, tuple] = {
+    "embed": ("p_vocab", "p_embed"),
+    "lm_head": ("p_in", "vocab"),
+    "pos_embed": (None, "p_embed"),
+    "enc_pos": (None, "p_embed"),
+    # attention
+    "wqkv": ("p_in", "p_out"),
+    "bqkv": (None,),
+    "bo": (None,),
+    # shared output-projection name (attn wo [H*D, d], mlp wo [ff, d],
+    # rwkv wo [d, d], moe wo [E, ff, d] — all contract a model-sharded dim
+    "wo": ("p_out", "p_in"),
+    # mlp / moe
+    "wi": ("p_in", "p_out"),
+    "wg": ("p_in", "p_out"),
+    "bi": (None,),
+    "router": ("p_in", None),
+    # mamba
+    "in_proj": ("p_in", "p_out"),
+    "conv_w": (None, "p_out"),
+    "conv_b": ("p_out",),
+    "x_proj": ("p_out", None),
+    "dt_proj": (None, "p_out"),
+    "dt_bias": ("p_out",),
+    "A_log": ("p_out", None),
+    "D": ("p_out",),
+    "out_proj": ("p_out", "p_in"),
+    # rwkv
+    "mu": (None, None),
+    "wr": ("p_in", "p_out"),
+    "wk": ("p_in", "p_out"),
+    "wv": ("p_in", "p_out"),
+    "wd1": ("p_in", None),
+    "wd2": (None, "p_out"),
+    "decay_base": ("p_out",),
+    "bonus": (None, None),
+    "ln_scale": ("p_out",),
+    # norms
+    "scale": (None,),
+    "bias": (None,),
+}
+
+_CACHE_TABLE: dict[str, tuple] = {
+    "k": ("batch", "kv_heads", "kv_seq", "head_dim"),
+    "v": ("batch", "kv_heads", "kv_seq", "head_dim"),
+    "conv": ("batch", None, "ffn"),
+    "ssm": ("batch", "ffn", None),
+    "shift": ("batch", None),
+    "state": ("batch", "heads", None, None),
+    "enc_out": ("batch", None, None),
+}
+
+
+def _leaf_path_keys(path) -> list[str]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+        elif hasattr(p, "name"):
+            keys.append(str(p.name))
+    return keys
+
+
+def _spec_for(path, leaf, table, stack_marker="scan"):
+    keys = _leaf_path_keys(path)
+    last = keys[-1]
+    base = table.get(last)
+    if base is None:
+        # MoE experts: 3-D wi/wg/wo handled via ndim below; unknown ->
+        # replicate (safe default)
+        base = (None,) * leaf.ndim
+        return base
+    spec = tuple(base)
+    # MoE expert tensors gain a leading experts axis
+    extra = leaf.ndim - len(spec)
+    if stack_marker in keys:
+        extra -= 1  # stacked-layer leading axis
+    if extra > 0:
+        spec = ("p_experts",) * extra + spec
+    if stack_marker in keys:
+        spec = ("layers",) + spec
+    if len(spec) != leaf.ndim:  # fallback: replicate
+        spec = (None,) * leaf.ndim
+    return spec
+
+
+def param_logical_tree(params):
+    """Pytree of logical-name tuples matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _spec_for(p, l, _PARAM_TABLE), params)
+
+
+def cache_logical_tree(cache):
+    def spec(path, leaf):
+        keys = _leaf_path_keys(path)
+        last = keys[-1]
+        base = _CACHE_TABLE.get(last, (None,) * leaf.ndim)
+        spec = tuple(base)
+        if "scan" in keys and len(spec) == leaf.ndim - 1:
+            spec = ("layers",) + spec
+        if len(spec) != leaf.ndim:
+            spec = (None,) * leaf.ndim
+        return spec
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def to_shardings(mesh, rules, logical_tree, shape_tree=None):
+    """Logical tree -> NamedSharding tree.
+
+    ``shape_tree`` (ShapeDtypeStructs, optional) enables per-leaf
+    divisibility checks: a mesh axis that does not divide the dim is
+    dropped (e.g. whisper's 1500-frame cross-attention cache vs
+    kv_seq->model=16) instead of failing in pjit.
+    """
+    from repro.distributed.sharding import _divisible, named_sharding
+
+    def build(names, leaf=None):
+        sh = named_sharding(mesh, rules, tuple(names))
+        if leaf is None or _divisible(mesh, sh.spec, leaf.shape):
+            return sh
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        fixed = []
+        for i, ax in enumerate(sh.spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            probe = P(*([None] * i + [ax] + [None] * (leaf.ndim - i - 1)))
+            fixed.append(ax if _divisible(mesh, probe, leaf.shape)
+                         else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    is_leaf = lambda x: isinstance(x, tuple)  # noqa: E731
+    if shape_tree is None:
+        return jax.tree.map(build, logical_tree, is_leaf=is_leaf)
+    flat_l, treedef = jax.tree.flatten(logical_tree, is_leaf=is_leaf)
+    flat_s = treedef.flatten_up_to(shape_tree)
+    return jax.tree.unflatten(
+        treedef, [build(n, s) for n, s in zip(flat_l, flat_s)])

@@ -1,0 +1,12 @@
+"""repro.kernels — Pallas TPU kernels for compute hot-spots.
+
+snn_kernels:      SPU / NU / SU / fused SNNU (the paper's RV-SNN ops)
+flash_attention:  FlashAttention-2 style prefill kernel (LM substrate)
+ops:              jit'd wrappers + backend dispatch (ref / interp / tpu)
+ref:              pure-jnp oracles for all of the above
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+
+__all__ = ["ops", "ref", "flash_attention"]

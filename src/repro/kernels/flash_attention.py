@@ -1,0 +1,134 @@
+"""FlashAttention-2-style Pallas TPU kernel (prefill + decode).
+
+The LM substrate's perf-critical hot spot.  Online-softmax accumulation
+in VMEM scratch; supports causal masking, sliding windows (gemma3 /
+mixtral SWA) and GQA (the kv head index is derived from the q head index
+in the BlockSpec index maps, so kv blocks are fetched once per group).
+
+Block sizes default to MXU-friendly (128, 128) tiles; the f32
+accumulators live in VMEM scratch across the kv-block grid dimension
+(TPU grids iterate the last axis innermost & sequentially).
+
+The XLA fallback used by the multi-pod dry-run (chunked scan with
+identical math) lives in repro.models.layers.attention; this kernel is
+the single-chip deployment path, validated in interpret mode against
+ref.attention_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(block_q: int, block_k: int, seq_k: int, causal: bool,
+                  window: int | None, scale: float,
+                  q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # positions: queries are the last (num_q_blocks*block_q) tokens of the
+    # seq_k-long stream (prefill: equal; decode handled by the jnp path).
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + (seq_k - pl.num_programs(2) * block_q)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * scale   # (BQ, D)
+        k = k_ref[...].astype(jnp.float32)           # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (BQ, BK)
+        mask = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]                           # (BQ, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[...].astype(jnp.float32)            # (BK, D)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    if causal or window is not None:
+        # Skip fully-masked kv blocks (block-level sparsity).
+        needed = jnp.bool_(True)
+        if causal:
+            needed &= (kj * block_k) <= (q_pos[-1, 0])
+        if window is not None:
+            needed &= (kj + 1) * block_k - 1 > (q_pos[0, 0] - window)
+        pl.when(needed)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D] -> [B, Hq, Tq, D].
+
+    Tq/Tk must be multiples of the block sizes (pad upstream);
+    Hq % Hkv == 0 (GQA group = Hq // Hkv).
+    """
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    grid = (b, hq, tq // block_q, tk // block_k)
+    kern = functools.partial(_flash_kernel, block_q, block_k, tk, causal,
+                             window, scale)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, d),
+                         lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((None, None, block_k, d),
+                         lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+            pl.BlockSpec((None, None, block_k, d),
+                         lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, d),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

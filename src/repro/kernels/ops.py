@@ -1,0 +1,120 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles TPU-alignment padding (word axis -> multiple of 128 lanes,
+neuron axis -> multiple of the block size) and backend dispatch:
+
+  backend="ref"     pure-jnp oracle (XLA; used inside scans and dry-runs)
+  backend="interp"  Pallas interpret mode (CPU container: kernel body
+                    executed in Python — correctness validation)
+  backend="tpu"     compiled pl.pallas_call (the deployment target)
+
+The SNN training loop (repro.core.network) uses the ref path by default
+because it is scanned over time on CPU here; on a real TPU deployment the
+fused kernel replaces the per-cycle body 1:1 (same signature).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import snn_kernels as _k
+
+_LANES = 128
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, fill=0) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def _block_n(n_padded: int) -> int:
+    return min(128, n_padded)
+
+
+def _prep(weights, pre, block_w_mult=_LANES):
+    n, w = weights.shape
+    bn = _block_n(max(8, n))
+    wp = _pad_to(_pad_to(weights, 1, block_w_mult), 0, max(bn, 8))
+    pp = _pad_to(pre, 0, block_w_mult)
+    return wp, pp, bn
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def spike_process(spikes, weights, *, backend: str = "ref"):
+    """SPU: counts i32[n] = popcount(spikes & weights[i]) per row."""
+    if backend == "ref":
+        return _ref.spike_process_ref(spikes, weights)
+    n, _ = weights.shape
+    wp, pp, bn = _prep(weights, spikes)
+    out = _k.spike_process(pp, wp, block_n=max(bn, 8),
+                           block_w=min(wp.shape[1], 512),
+                           interpret=(backend == "interp"))
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "leak", "backend"))
+def lif_step(v, count, threshold: int, leak: int, *, backend: str = "ref"):
+    if backend == "ref":
+        return _ref.lif_step_ref(v, count, threshold, leak)
+    n = v.shape[0]
+    bn = _block_n(max(8, n))
+    vp = _pad_to(v, 0, bn)
+    cp = _pad_to(count, 0, bn)
+    v2, f = _k.lif_step(vp, cp, threshold, leak, block_n=bn,
+                        interpret=(backend == "interp"))
+    return v2[:n], f[:n]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "w_exp", "gain", "n_syn", "ltp_prob", "backend"))
+def stdp_update(weights, pre_spikes, post_fired, lfsr_state, *,
+                w_exp: int, gain: int, n_syn: int, ltp_prob: int = 1023,
+                backend: str = "ref"):
+    if backend == "ref":
+        return _ref.stdp_update_ref(weights, pre_spikes, post_fired,
+                                    lfsr_state, w_exp, gain, n_syn, ltp_prob)
+    n, w = weights.shape
+    wp, pp, bn = _prep(weights, pre_spikes)
+    fp = _pad_to(post_fired, 0, max(bn, 8))
+    # padded LFSR lanes must be nonzero (absorbing state), value is unused
+    sp = _pad_to(_pad_to(lfsr_state, 1, _LANES, fill=1), 0, max(bn, 8),
+                 fill=1)
+    w2, s2 = _k.stdp_update(wp, pp, fp, sp, w_exp=w_exp, gain=gain,
+                            n_syn=n_syn, ltp_prob=ltp_prob,
+                            block_n=max(bn, 8),
+                            interpret=(backend == "interp"))
+    return w2[:n, :w], s2[:n, :w]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "threshold", "leak", "w_exp", "gain", "n_syn", "ltp_prob", "train",
+    "backend"))
+def fused_snn_step(weights, pre_spikes, v, lfsr_state, teach, *,
+                   threshold: int, leak: int, w_exp: int, gain: int,
+                   n_syn: int, ltp_prob: int = 1023, train: bool = True,
+                   backend: str = "ref"):
+    """The paper's coarse-granularity ``snn.step`` as one fused kernel."""
+    if backend == "ref":
+        return _ref.fused_snn_step_ref(
+            weights, pre_spikes, v, lfsr_state, teach, threshold, leak,
+            w_exp, gain, n_syn, ltp_prob)
+    n, w = weights.shape
+    wp, pp, bn = _prep(weights, pre_spikes)
+    bn = max(bn, 8)
+    vp = _pad_to(v, 0, bn)
+    tp = _pad_to(teach, 0, bn)
+    sp = _pad_to(_pad_to(lfsr_state, 1, _LANES, fill=1), 0, bn, fill=1)
+    w2, v2, f, s2 = _k.fused_snn_step(
+        wp, pp, vp, sp, tp, threshold=threshold, leak=leak, w_exp=w_exp,
+        gain=gain, n_syn=n_syn, ltp_prob=ltp_prob, train=train,
+        block_n=bn, interpret=(backend == "interp"))
+    return w2[:n, :w], v2[:n], f[:n], s2[:n, :w]

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+assert bit-exact (integer kernels) or allclose (attention) agreement.
+The SNN oracles delegate to ``repro.core`` — the core module IS the
+architectural reference (ISA-level semantics); the kernels are the TPU
+microarchitecture.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lfsr as _lfsr
+from repro.core.bitpack import popcount
+from repro.core.lif import LIFParams, lif_step as _lif_step
+from repro.core.stdp import STDPParams, stdp_update as _stdp_update
+
+
+def spike_process_ref(spikes: jnp.ndarray, weights: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """SPU: valid-spike counts.  spikes u32[w], weights u32[n, w] -> i32[n]."""
+    return popcount(jnp.bitwise_and(spikes[None, :], weights))
+
+
+def lif_step_ref(v: jnp.ndarray, count: jnp.ndarray, threshold: int,
+                 leak: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """NU: streamlined LIF.  v,count i32[n] -> (v' i32[n], fired bool[n])."""
+    return _lif_step(v, count, LIFParams(jnp.int32(threshold),
+                                         jnp.int32(leak)))
+
+
+def stdp_update_ref(weights, pre_spikes, post_fired, lfsr_state,
+                    w_exp: int, gain: int, n_syn: int, ltp_prob: int):
+    """SU: binary stochastic STDP row update (see repro.core.stdp)."""
+    p = STDPParams(jnp.int32(w_exp), jnp.int32(gain), jnp.int32(n_syn),
+                   jnp.uint32(ltp_prob))
+    return _stdp_update(weights, pre_spikes, post_fired, lfsr_state, p)
+
+
+def fused_snn_step_ref(weights, pre_spikes, v, lfsr_state, teach,
+                       threshold: int, leak: int, w_exp: int, gain: int,
+                       n_syn: int, ltp_prob: int):
+    """SNNU: one fused spike->neuron->synapse cycle.
+
+    Returns (weights', v', fired, lfsr').  ``teach`` may be None.
+    """
+    counts = spike_process_ref(pre_spikes, weights)
+    if teach is not None:
+        counts = counts + teach
+    v2, fired = lif_step_ref(v, counts, threshold, leak)
+    w2, lf2 = stdp_update_ref(weights, pre_spikes, fired, lfsr_state,
+                              w_exp, gain, n_syn, ltp_prob)
+    return w2, v2, fired, lf2
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None) -> jnp.ndarray:
+    """Dense reference attention.
+
+    q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D] (GQA: Hq % Hkv == 0).
+    window: sliding-window size (keys within [i - window + 1, i]).
+    """
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, hkv, group, tq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+    # offset: queries are the LAST tq positions of the tk-long stream
+    tk = kf.shape[2]
+    qpos = jnp.arange(tq)[:, None] + (tk - tq)
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, hq, tq, d).astype(q.dtype)

@@ -1,0 +1,225 @@
+"""Pallas TPU kernels for the RV-SNN datapath (SPU / NU / SU / fused SNNU).
+
+Layout conventions
+------------------
+All packed operands are padded on the word axis to a multiple of 128
+(the TPU lane width) by ``ops.py``; tail words are zero, which every op
+here preserves (AND/popcount ignore zero words; STDP's LTP or-in of a
+zero pre-word is a no-op and LTD can only clear).  The neuron axis is
+blocked by ``BN`` (multiple of 8, the sublane width).
+
+VMEM budget (per grid step, BN=128, padded words W<=2048):
+  fused step: weights + lfsr + outputs ~ 4 * BN * W * 4B = 4 MiB at the
+  64k-synapse extreme, comfortably under the ~16 MiB v5e VMEM.
+
+The fused kernel is the TPU microarchitecture of the paper's
+coarse-granularity ``snn.step`` instruction: one pass through VMEM does
+spike-process + LIF + STDP, where the unfused path round-trips HBM
+between the three stages (benchmarked in benchmarks/kernels_bench.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# --- in-kernel LFSR (bit-exact with repro.core.lfsr) -------------------------
+
+def _lfsr_step(state):
+    fb = state
+    for sh in (2, 3, 5):
+        fb = jnp.bitwise_xor(fb, jnp.right_shift(state, jnp.uint32(sh)))
+    fb = jnp.bitwise_and(fb, jnp.uint32(1))
+    return jnp.bitwise_and(
+        jnp.bitwise_or(jnp.right_shift(state, jnp.uint32(1)),
+                       jnp.left_shift(fb, jnp.uint32(15))),
+        jnp.uint32(0xFFFF))
+
+
+def _popcount_rows(words):
+    """uint32[bn, w] -> int32[bn] total set bits per row."""
+    return jnp.sum(jax.lax.population_count(words).astype(jnp.int32),
+                   axis=-1)
+
+
+# --- SPU: spike process -------------------------------------------------------
+
+def _spike_process_kernel(s_ref, w_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s = s_ref[...]          # (1, BW)
+    w = w_ref[...]          # (BN, BW)
+    o_ref[...] += _popcount_rows(jnp.bitwise_and(s, w))
+
+
+def spike_process(spikes, weights, *, block_n=128, block_w=512,
+                  interpret=False):
+    """SPU kernel.  spikes u32[w], weights u32[n, w] -> counts i32[n].
+
+    Requires n % block_n == 0 and w % block_w == 0 (ops.py pads).
+    """
+    n, w = weights.shape
+    grid = (n // block_n, w // block_w)
+    return pl.pallas_call(
+        _spike_process_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_w), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n, block_w), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        interpret=interpret,
+    )(spikes[None, :], weights)
+
+
+# --- NU: streamlined LIF ------------------------------------------------------
+
+def _lif_kernel(threshold: int, leak: int, v_ref, c_ref, v_out_ref, f_ref):
+    # threshold/leak are Python ints -> lowered as literals.
+    v = v_ref[...] + c_ref[...]
+    fired = v >= threshold
+    v_out_ref[...] = jnp.where(
+        fired, jnp.int32(0), jnp.maximum(v - leak, jnp.int32(0)))
+    f_ref[...] = fired
+
+
+def lif_step(v, count, threshold: int, leak: int, *, block_n=128,
+             interpret=False):
+    """NU kernel.  v, count i32[n] -> (v' i32[n], fired bool[n])."""
+    n = v.shape[0]
+    kern = functools.partial(_lif_kernel, int(threshold), int(leak))
+    return pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.bool_)),
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
+                  pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=(pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((block_n,), lambda i: (i,))),
+        interpret=interpret,
+    )(v, count)
+
+
+# --- SU: binary stochastic STDP ----------------------------------------------
+
+def _stdp_body(w, pre, fired, st, *, w_exp, gain, n_syn, ltp_prob):
+    """Shared LTP+LTD dataflow (uint32 blocks).  Returns (w', st')."""
+    fired_u = fired[:, None]
+    s1 = _lfsr_step(st)
+    x_ltp = jnp.bitwise_and(s1, jnp.uint32(0x3FF))
+    s2 = _lfsr_step(s1)
+    x_ltd = jnp.bitwise_and(s2, jnp.uint32(0x3FF))
+    st_out = jnp.where(fired_u, s2, st)
+
+    potentiate = x_ltp <= jnp.uint32(ltp_prob)
+    ltp = jnp.where(potentiate, jnp.bitwise_or(w, pre), w)
+    pc = _popcount_rows(ltp)
+    excess = (pc - jnp.int32(w_exp)) * jnp.int32(gain) * 1024 \
+        // jnp.int32(n_syn)
+    prob = jnp.clip(excess, 0, 1023).astype(jnp.uint32)
+    depress = x_ltd <= prob[:, None]
+    ltd = jnp.where(depress, jnp.bitwise_and(ltp, pre), ltp)
+    w_out = jnp.where(fired_u, ltd, w)
+    return w_out, st_out
+
+
+def _stdp_kernel(w_exp, gain, n_syn, ltp_prob,
+                 w_ref, pre_ref, f_ref, st_ref, wo_ref, sto_ref):
+    w_out, st_out = _stdp_body(
+        w_ref[...], pre_ref[...], f_ref[...], st_ref[...],
+        w_exp=w_exp, gain=gain, n_syn=n_syn, ltp_prob=ltp_prob)
+    wo_ref[...] = w_out
+    sto_ref[...] = st_out
+
+
+def stdp_update(weights, pre_spikes, post_fired, lfsr_state, *,
+                w_exp: int, gain: int, n_syn: int, ltp_prob: int,
+                block_n=128, interpret=False):
+    """SU kernel.  Whole word axis in-block (row popcount is global).
+
+    weights/lfsr u32[n, w], pre u32[w], fired bool[n]
+    -> (weights' u32[n, w], lfsr' u32[n, w]).
+    """
+    n, w = weights.shape
+    kern = functools.partial(_stdp_kernel, w_exp, gain, n_syn, ltp_prob)
+    return pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((n, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((n, w), jnp.uint32)),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+        ],
+        out_specs=(pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+                   pl.BlockSpec((block_n, w), lambda i: (i, 0))),
+        interpret=interpret,
+    )(weights, pre_spikes[None, :], post_fired, lfsr_state)
+
+
+# --- fused SNNU step (the paper's coarse-granularity instruction) -------------
+
+def _fused_kernel(threshold, leak, w_exp, gain, n_syn, ltp_prob, train,
+                  w_ref, pre_ref, v_ref, st_ref, t_ref,
+                  wo_ref, vo_ref, f_ref, sto_ref):
+    w = w_ref[...]
+    pre = pre_ref[...]
+    counts = _popcount_rows(jnp.bitwise_and(pre, w)) + t_ref[...]
+    v = v_ref[...] + counts
+    fired = v >= threshold
+    vo_ref[...] = jnp.where(
+        fired, jnp.int32(0), jnp.maximum(v - leak, jnp.int32(0)))
+    f_ref[...] = fired
+    if train:
+        w_out, st_out = _stdp_body(
+            w, pre, fired, st_ref[...],
+            w_exp=w_exp, gain=gain, n_syn=n_syn, ltp_prob=ltp_prob)
+    else:
+        w_out, st_out = w, st_ref[...]
+    wo_ref[...] = w_out
+    sto_ref[...] = st_out
+
+
+def fused_snn_step(weights, pre_spikes, v, lfsr_state, teach, *,
+                   threshold: int, leak: int, w_exp: int, gain: int,
+                   n_syn: int, ltp_prob: int, train: bool = True,
+                   block_n=128, interpret=False):
+    """One fused SNNU cycle: SPU + NU + SU in a single VMEM pass.
+
+    Returns (weights', v', fired, lfsr').
+    """
+    n, w = weights.shape
+    kern = functools.partial(_fused_kernel, int(threshold), int(leak),
+                             w_exp, gain, n_syn, ltp_prob, train)
+    return pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((n, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.bool_),
+                   jax.ShapeDtypeStruct((n, w), jnp.uint32)),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=(pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+                   pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((block_n, w), lambda i: (i, 0))),
+        interpret=interpret,
+    )(weights, pre_spikes[None, :], v, lfsr_state, teach)

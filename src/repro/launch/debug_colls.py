@@ -1,0 +1,133 @@
+"""Debug tool: top collective / largest-tensor contributors in a cell's
+compiled HLO.  Usage:
+  python -m repro.launch.debug_colls --arch gemma3-1b --shape train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import re  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch import dryrun as dr  # noqa: E402
+from repro.launch.hlo_cost import (HloCostModel, _parse_op, _shape_info,  # noqa: E402
+                                   _TRIP_RE, _BODY_RE, _CALLS_RE)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    shape = SHAPES[args.shape]
+    import jax
+    from repro.distributed import sharding as shd
+    from repro.distributed.specs import (cache_logical_tree,
+                                         param_logical_tree, to_shardings)
+    from repro.launch import inputs as inp
+    from repro.launch.mesh import make_production_mesh
+    import jax.numpy as jnp
+
+    mesh = make_production_mesh(multi_pod=args.multipod)
+    model = dr.build_model(args.arch)
+    rules = dr.rules_for(args.arch, shape, mesh)
+    from repro.launch.train import make_train_step
+    from repro.launch.serve import make_prefill_step, make_serve_step
+    cfg = model.cfg
+    with shd.use_mesh(mesh, rules):
+        params_shape = jax.eval_shape(
+            lambda: model.init_params(jax.random.key(0)))
+        p_sh = to_shardings(mesh, rules, param_logical_tree(params_shape), params_shape)
+        none_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        if shape.kind == "train":
+            opt = dr.make_optimizer(args.arch)
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            o_sh = {"m": p_sh, "v": p_sh, "step": none_sh}
+            b_sh = to_shardings(mesh, rules,
+                                inp.input_logical(cfg, shape))
+            step = make_train_step(model, opt,
+                                   accum_steps=dr.ACCUM.get(args.arch, 1))
+            lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh,
+                                                  none_sh),
+                              donate_argnums=(0, 1)).lower(
+                params_shape, opt_shape, inp.input_specs(cfg, shape),
+                inp.rng_spec())
+        elif shape.kind == "prefill":
+            b_sh = to_shardings(mesh, rules,
+                                inp.input_logical(cfg, shape))
+            step = make_prefill_step(model, max_len=shape.seq_len)
+            lowered = jax.jit(step, in_shardings=(p_sh, b_sh)).lower(
+                params_shape, inp.input_specs(cfg, shape))
+        else:
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch,
+                                         shape.seq_len))
+            c_sh = to_shardings(mesh, rules,
+                                cache_logical_tree(cache_shape),
+                                cache_shape)
+            tok_spec, tok_log = inp.decode_token_specs(cfg, shape)
+            t_sh = to_shardings(mesh, rules, {"t": tok_log})["t"]
+            step = make_serve_step(model)
+            lowered = jax.jit(step, in_shardings=(p_sh, t_sh, c_sh,
+                                                  none_sh),
+                              donate_argnums=(2,)).lower(
+                params_shape, tok_spec, cache_shape,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        compiled = lowered.compile()
+    txt = compiled.as_text()
+
+    # per-collective-op totals with trip multipliers
+    cm = HloCostModel(txt)
+    trips: dict[str, float] = {cm.entry: 1.0}
+    # propagate trip counts through while/call/fusion references
+    order = [cm.entry]
+    seen = {cm.entry}
+    while order:
+        name = order.pop(0)
+        mult = trips.get(name, 1.0)
+        for line in cm.computations.get(name, []):
+            p = _parse_op(line)
+            if not p:
+                continue
+            _, _, opcode, _, attrs = p
+            t = 1.0
+            mt = _TRIP_RE.search(attrs)
+            if opcode == "while" and mt:
+                t = float(mt.group(1))
+            for rx in (_BODY_RE, _CALLS_RE):
+                mm = rx.search(attrs)
+                if mm:
+                    child = mm.group(1)
+                    trips[child] = max(trips.get(child, 0), mult * t)
+                    if child not in seen:
+                        seen.add(child)
+                        order.append(child)
+    rows = []
+    for name, lines in cm.computations.items():
+        mult = trips.get(name, 1.0)
+        for line in lines:
+            p = _parse_op(line)
+            if not p:
+                continue
+            nm, out_type, opcode, _, attrs = p
+            base = opcode.replace("-start", "")
+            if base in ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute") \
+                    and not opcode.endswith("-done"):
+                b, _ = _shape_info(out_type)
+                meta = re.search(r'op_name="([^"]*)"', attrs)
+                rows.append((b * mult, b, mult, base,
+                             (meta.group(1) if meta else nm)[:110]))
+    rows.sort(reverse=True)
+    print("\nTop collectives (total_bytes x trips):")
+    for tot, b, mult, kind, opname in rows[:args.top]:
+        print(f"  {tot/1e9:8.2f} GB  ({b/1e6:8.1f} MB x {mult:4.0f})  "
+              f"{kind:<18s} {opname}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. picks the sharding rules for the arch (heads-TP vs sequence-
+     parallel; batch rules degrade gracefully when B < shards),
+  3. jits the train / prefill / serve step with NamedShardings derived
+     from the logical spec trees and lowers it against ShapeDtypeStruct
+     inputs (no allocation),
+  4. compiles, records memory_analysis / cost_analysis / collective
+     bytes (launch/roofline.py), and appends to the results JSON.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh both|pod|multipod]
+  python -m repro.launch.dryrun --all --out experiments/dryrun.json
+"""  # noqa: E402
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, applicable_shapes, get_config
+from repro.configs.shapes import LONG_SKIP_REASONS, ShapeSpec
+from repro.distributed import sharding as shd
+from repro.distributed.specs import (cache_logical_tree, param_logical_tree,
+                                     to_shardings)
+from repro.launch import inputs as inp
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, estimate_tpu_peak, model_flops
+from repro.launch.serve import make_prefill_step, make_serve_step
+from repro.launch.train import make_train_step
+from repro.models.transformer import Model
+from repro.optim.adamw import AdamW, AdamWConfig
+
+ARCHS = [
+    "whisper-small", "mixtral-8x22b", "grok-1-314b", "rwkv6-7b",
+    "starcoder2-3b", "command-r-35b", "gemma3-1b", "llama3-405b",
+    "jamba-1.5-large-398b", "internvl2-26b",
+]
+
+# Archs whose head counts don't divide model=16 -> sequence-parallel attn.
+SEQPAR = {"gemma3-1b", "whisper-small", "starcoder2-3b"}
+
+# Microbatch accumulation for the train shape (keeps activations in HBM).
+ACCUM = {
+    "llama3-405b": 8, "jamba-1.5-large-398b": 8, "grok-1-314b": 4,
+    "command-r-35b": 4, "mixtral-8x22b": 4, "internvl2-26b": 4,
+    "rwkv6-7b": 2, "starcoder2-3b": 1, "gemma3-1b": 1,
+    "whisper-small": 1,
+}
+
+# >=100B-class archs train with bf16 states + stochastic rounding
+# (8 bytes/param total; see repro.optim.adamw).
+BF16_STATE = {"llama3-405b", "jamba-1.5-large-398b", "grok-1-314b",
+              "mixtral-8x22b"}
+
+
+def rules_for(arch: str, shape: ShapeSpec, mesh) -> dict:
+    overrides = {}
+    if arch in SEQPAR:
+        overrides.update(shd.SEQPAR_RULES_OVERRIDES)
+    n_batch_shards = 1
+    for ax in ("pod", "data"):
+        n_batch_shards *= mesh.shape.get(ax, 1)
+    if shape.global_batch % n_batch_shards != 0:
+        overrides["batch"] = ("data",) if shape.global_batch % \
+            mesh.shape.get("data", 1) == 0 else None
+    return shd.use_rules(**overrides)
+
+
+# §Perf hillclimb variants: model-construction overrides, selected with
+# --variant; results are keyed "<cell>#<variant>" so baselines persist.
+VARIANTS: dict[str, dict] = {
+    "rwkv-chunk32": {"rwkv_chunk": 32},
+    "rwkv-chunk64": {"rwkv_chunk": 64},
+    "rwkv-chunk128": {"rwkv_chunk": 128},
+}
+
+# train-step accumulation overrides per variant (hillclimb B)
+VARIANT_ACCUM: dict[str, int] = {
+    "accum16": 16,
+    "accum32": 32,
+}
+for _v in VARIANT_ACCUM:
+    VARIANTS.setdefault(_v, {})
+
+
+def build_model(arch: str, variant: str | None = None) -> Model:
+    cfg = get_config(arch)
+    kw = dict(VARIANTS.get(variant, {}))
+    return Model(cfg, dtype=jnp.bfloat16, remat=True, **kw)
+
+
+def make_optimizer(arch: str) -> AdamW:
+    if arch in BF16_STATE:
+        return AdamW(AdamWConfig(state_dtype=jnp.bfloat16,
+                                 stochastic_rounding=True))
+    return AdamW(AdamWConfig(state_dtype=jnp.float32))
+
+
+def lower_cell(arch: str, shape: ShapeSpec, multi_pod: bool,
+               *, variant: str | None = None,
+               compile_only_summary: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    model = build_model(arch, variant)
+    cfg = model.cfg
+    rules = rules_for(arch, shape, mesh)
+
+    t0 = time.time()
+    with shd.use_mesh(mesh, rules):
+        params_shape = jax.eval_shape(
+            lambda: model.init_params(jax.random.key(0)))
+        p_log = param_logical_tree(params_shape)
+        p_sh = to_shardings(mesh, rules, p_log, params_shape)
+        batch_shape = inp.input_specs(cfg, shape)
+        b_log = inp.input_logical(cfg, shape)
+        b_sh = to_shardings(mesh, rules, b_log)
+        none_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+
+        accum = VARIANT_ACCUM.get(variant or "", ACCUM.get(arch, 1))
+        if shape.kind == "train":
+            opt = make_optimizer(arch)
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            o_sh = {"m": p_sh, "v": p_sh, "step": none_sh}
+            step = make_train_step(model, opt, accum_steps=accum)
+            fn = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, b_sh, none_sh),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_shape, opt_shape, batch_shape,
+                               inp.rng_spec())
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, max_len=shape.seq_len)
+            fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(params_shape, batch_shape)
+        else:  # decode
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch,
+                                         shape.seq_len))
+            c_log = cache_logical_tree(cache_shape)
+            c_sh = to_shardings(mesh, rules, c_log, cache_shape)
+            tok_spec, tok_log = inp.decode_token_specs(cfg, shape)
+            t_sh = to_shardings(mesh, rules, {"t": tok_log})["t"]
+            step = make_serve_step(model)
+            fn = jax.jit(step,
+                         in_shardings=(p_sh, t_sh, c_sh, none_sh),
+                         donate_argnums=(2,))
+            lowered = fn.lower(params_shape, tok_spec, cache_shape,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    rl = analyze(compiled, chips)
+    mf = model_flops(cfg, shape)
+    bytes_per_dev = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes
+                     - mem.alias_size_in_bytes)
+    est_peak = estimate_tpu_peak(
+        cfg, shape, chips, mesh.shape.get("model", 1),
+        accum if shape.kind == "train" else 1,
+        mem.argument_size_in_bytes)
+    result = {
+        "arch": arch, "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "arg_bytes": mem.argument_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "out_bytes": mem.output_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_bytes_per_device": bytes_per_dev,
+        "est_tpu_peak_bytes": est_peak,
+        "fits_16GB_cpu_temp": bool(bytes_per_dev < 16e9),
+        "fits_16GB": bool(est_peak < 16e9),
+        "roofline": rl.summary(),
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf / chips,
+        "useful_flops_frac": (mf / chips) / max(rl.flops, 1.0),
+    }
+    return result
+
+
+def load_results(path: Path) -> dict:
+    if path.exists():
+        return json.loads(path.read_text())
+    return {}
+
+
+def save_results(path: Path, results: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(results, indent=1, sort_keys=True))
+
+
+def cell_key(arch, shape_name, multi_pod):
+    return f"{arch}|{shape_name}|{'2x16x16' if multi_pod else '16x16'}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default=None, choices=sorted(VARIANTS))
+    ap.add_argument("--out", default="experiments/dryrun_results.json")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    results = load_results(out)
+
+    cells = []
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([SHAPES[args.shape]] if args.shape
+                  else applicable_shapes(cfg))
+        for s in shapes:
+            for mp in meshes:
+                cells.append((arch, s, mp))
+    # record skips
+    for arch in archs:
+        if arch in LONG_SKIP_REASONS and (not args.shape
+                                          or args.shape == "long_500k"):
+            for mp in meshes:
+                results[cell_key(arch, "long_500k", mp)] = {
+                    "arch": arch, "shape": "long_500k",
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "skipped",
+                    "reason": LONG_SKIP_REASONS[arch],
+                }
+
+    for arch, s, mp in cells:
+        key = cell_key(arch, s.name, mp)
+        if args.variant:
+            key = f"{key}#{args.variant}"
+        if not args.force and results.get(key, {}).get("status") == "ok":
+            print(f"[skip cached] {key}", flush=True)
+            continue
+        print(f"[cell] {key} ...", flush=True)
+        try:
+            res = lower_cell(arch, s, mp, variant=args.variant)
+            print(f"  -> {res['status']} compile={res['compile_s']}s "
+                  f"peak={res['peak_bytes_per_device']/1e9:.2f}GB "
+                  f"dominant={res['roofline']['dominant']}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            res = {"arch": arch, "shape": s.name,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": str(e)[:2000],
+                   "trace": traceback.format_exc()[-4000:]}
+            print(f"  -> ERROR {str(e)[:300]}", flush=True)
+        results[key] = res
+        save_results(out, results)
+
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    print(f"done: {n_ok} ok / {len(results)} recorded")
+
+
+if __name__ == "__main__":
+    main()

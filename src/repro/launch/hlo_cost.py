@@ -1,0 +1,374 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+under-reports every lax.scan in this codebase (layer stacks, microbatch
+accumulation, kv-chunked attention, loss chunks, SSM time scans) — the
+probe in EXPERIMENTS.md §Roofline shows an 8-iteration scan reporting 1x
+its flops.  This module re-derives roofline inputs by walking the
+compiled HLO text:
+
+* dot flops       = 2 * prod(result_dims) * prod(lhs_contracting_dims)
+* elementwise     = 1 flop / result element
+* while           = trip_count x (body + cond)   [backend_config
+                    known_trip_count; static lax.scan always has it]
+* fusion          = internal flops; HBM bytes counted at the fusion
+                    boundary only (operands + result)
+* conditional     = max over branches
+* collectives     = wire bytes per device with ring-cost multipliers:
+                    all-gather/reduce-scatter ~ bytes, all-reduce ~ 2x,
+                    all-to-all ~ bytes, collective-permute ~ bytes
+
+Approximations (documented in EXPERIMENTS.md): intra-fusion reuse is
+perfect, inter-op HBM caching is ignored, transcendentals count 1 flop.
+CPU-backend fusion boundaries differ from TPU's; numbers are
+order-correct roofline inputs, not cycle-accurate predictions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4,
+                "u32": 4, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+                "u64": 8, "s16": 2, "u16": 2, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+                "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+
+_OP_HEAD_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+
+def _parse_op(line: str):
+    """-> (name, type, opcode, operands, attrs) or None.
+
+    Operand list is extracted with balanced-paren scanning because
+    metadata attrs contain nested parens (e.g. op_name="jit(f)/...").
+    """
+    m = _OP_HEAD_RE.match(line)
+    if not m:
+        return None
+    start = m.end()  # index just past the opening paren
+    depth = 1
+    i = start
+    while i < len(line) and depth:
+        ch = line[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        i += 1
+    operands = line[start:i - 1]
+    attrs = line[i:]
+    return m.group(1), m.group(2), m.group(3), operands, attrs
+
+# computation headers end with "{" and contain "->"; param lists may
+# nest parens (tuple types) so only the leading name is parsed.
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_ZERO_COST = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "after-all", "token", "partition-id",
+              "replica-id", "opt-barrier", "domain"}
+
+_COLLECTIVES = {"all-gather": 1.0, "all-reduce": 2.0,
+                "reduce-scatter": 1.0, "all-to-all": 1.0,
+                "collective-permute": 1.0}
+
+
+def _shape_info(type_str: str) -> tuple[int, list[list[int]]]:
+    """bytes, list of dim-lists for a (possibly tuple) HLO type."""
+    total = 0
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dl = [int(d) for d in dims.split(",") if d] if dims else []
+        n = 1
+        for d in dl:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append(dl)
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations = self._split(hlo_text)
+        self.entry = self._find_entry(hlo_text)
+        self._memo: dict[str, Cost] = {}
+
+    @staticmethod
+    def _split(text: str) -> dict[str, list[str]]:
+        comps: dict[str, list[str]] = {}
+        cur = None
+        for line in text.splitlines():
+            stripped = line.rstrip()
+            if (stripped.endswith("{") and "->" in stripped
+                    and not line.startswith(" ")):
+                m = _COMP_RE.match(line)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                    continue
+                comps[cur].append(line)
+        return comps
+
+    @staticmethod
+    def _find_entry(text: str) -> str:
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+                if m:
+                    return m.group(1)
+        raise ValueError("no ENTRY computation found")
+
+    def cost(self) -> Cost:
+        return self._cost_of(self.entry, top=True)
+
+    def _cost_of(self, name: str, top: bool) -> Cost:
+        key = f"{name}|{top}"
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        symtab: dict[str, str] = {}
+        for line in self.computations.get(name, []):
+            m = _parse_op(line)
+            if not m:
+                continue
+            out_name, out_type, opcode, operands, attrs = m
+            symtab[out_name] = out_type
+            total.add(self._op_cost(out_type, opcode, operands, attrs,
+                                    symtab, top))
+        self._memo[key] = total
+        return total
+
+    def _fusion_operand_bytes(self, callee: str, operand_names: list,
+                              symtab: dict) -> float:
+        """Effective HBM read bytes of a fusion's operands.
+
+        A parameter consumed only by dynamic-slice/gather/slice inside
+        the fusion reads just the slice, not the whole buffer (the
+        lax.scan xs pattern) — counting the full operand would inflate
+        loop-body traffic by the trip count.
+        """
+        lines = self.computations.get(callee, [])
+        # param idx -> param ssa name
+        params: dict[int, str] = {}
+        for line in lines:
+            p = _parse_op(line)
+            if p and p[2] == "parameter":
+                try:
+                    params[int(p[3])] = p[0]
+                except ValueError:
+                    pass
+        total = 0.0
+        for idx, nm in enumerate(operand_names):
+            t = symtab.get(nm)
+            if not t:
+                continue
+            full, _ = _shape_info(t)
+            pname = params.get(idx)
+            if pname is None:
+                total += full
+                continue
+            slice_bytes = 0.0
+            sliced_only = True
+            used = False
+            pat = re.compile(r"%?" + re.escape(pname) + r"\b")
+            for line in lines:
+                p = _parse_op(line)
+                if not p or p[0] == pname:
+                    continue
+                if pat.search(p[3]):
+                    used = True
+                    if p[2] in ("dynamic-slice", "gather", "slice"):
+                        b, _ = _shape_info(p[1])
+                        slice_bytes += b
+                    else:
+                        sliced_only = False
+                        break
+            if used and sliced_only:
+                total += slice_bytes
+            elif used:
+                total += full
+        return total
+
+    def _operand_names(self, operands: str) -> list[str]:
+        names = []
+        depth = 0
+        cur = ""
+        for ch in operands:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+            elif ch == "," and depth == 0:
+                names.append(cur.strip())
+                cur = ""
+                continue
+            cur += ch
+        if cur.strip():
+            names.append(cur.strip())
+        return [n.lstrip("%") for n in names]
+
+    def _op_cost(self, out_type: str, opcode: str, operands: str,
+                 attrs: str, symtab: dict, top: bool) -> Cost:
+        c = Cost()
+        if opcode in _ZERO_COST:
+            return c
+        out_bytes, out_shapes = _shape_info(out_type)
+        out_elems = 0
+        for dl in out_shapes:
+            n = 1
+            for d in dl:
+                n *= d
+            out_elems += n
+
+        opnd_bytes = 0
+        for nm in self._operand_names(operands):
+            t = symtab.get(nm)
+            if t:
+                b, _ = _shape_info(t)
+                opnd_bytes += b
+
+        base = opcode.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES:
+            if opcode.endswith("-done"):
+                return c
+            wire = out_bytes * _COLLECTIVES[base]
+            c.coll[base] = c.coll.get(base, 0.0) + wire
+            c.bytes += out_bytes + opnd_bytes
+            return c
+
+        if opcode == "while":
+            trip = 1.0
+            mt = _TRIP_RE.search(attrs)
+            if mt:
+                trip = float(mt.group(1))
+            mb = _BODY_RE.search(attrs)
+            mc = _COND_RE.search(attrs)
+            if mb:
+                c.add(self._cost_of(mb.group(1), top=True), trip)
+            if mc:
+                c.add(self._cost_of(mc.group(1), top=True), trip)
+            return c
+
+        if opcode == "conditional":
+            mbr = _BRANCHES_RE.search(attrs)
+            if mbr:
+                branches = [b.strip().lstrip("%")
+                            for b in mbr.group(1).split(",")]
+                costs = [self._cost_of(b, top=True) for b in branches]
+                if costs:
+                    best = max(costs, key=lambda x: x.flops + x.bytes)
+                    c.add(best)
+            return c
+
+        if opcode == "fusion":
+            mcalls = _CALLS_RE.search(attrs)
+            eff_opnd = opnd_bytes
+            if mcalls:
+                callee = mcalls.group(1)
+                inner = self._cost_of(callee, top=False)
+                c.flops += inner.flops
+                for k, v in inner.coll.items():
+                    c.coll[k] = c.coll.get(k, 0.0) + v
+                eff_opnd = self._fusion_operand_bytes(
+                    callee, self._operand_names(operands), symtab)
+            c.bytes += out_bytes + eff_opnd
+            return c
+
+        if opcode in ("call", "async-start", "async-done",
+                      "async-update"):
+            mcalls = _CALLS_RE.search(attrs)
+            if mcalls and not opcode.endswith(("-done", "-update")):
+                c.add(self._cost_of(mcalls.group(1), top=True))
+            return c
+
+        if opcode == "dot":
+            k = 1.0
+            mct = _CONTRACT_RE.search(attrs)
+            lhs_name = self._operand_names(operands)[0] \
+                if operands else None
+            lhs_type = symtab.get(lhs_name or "", "")
+            _, lhs_shapes = _shape_info(lhs_type)
+            if mct and lhs_shapes:
+                dims = [int(d) for d in mct.group(1).split(",") if d]
+                for d in dims:
+                    if d < len(lhs_shapes[0]):
+                        k *= lhs_shapes[0][d]
+            c.flops += 2.0 * out_elems * k
+            if top:
+                c.bytes += out_bytes + opnd_bytes
+            return c
+
+        if opcode in ("dynamic-slice", "gather", "slice"):
+            # reads only the slice, not the sliced buffer
+            if top:
+                c.bytes += 2.0 * out_bytes
+            return c
+
+        if opcode in ("dynamic-update-slice", "scatter"):
+            # in-place region write: read update + write region
+            upd_idx = 1 if opcode == "dynamic-update-slice" else 2
+            names = self._operand_names(operands)
+            upd_bytes = 0
+            if len(names) > upd_idx:
+                t = symtab.get(names[upd_idx])
+                if t:
+                    upd_bytes, _ = _shape_info(t)
+            if top:
+                c.bytes += 2.0 * (upd_bytes or out_bytes)
+            return c
+
+        if opcode in ("convolution",):
+            # rare here; approximate via result * window (unknown) -> 2x
+            c.flops += 2.0 * out_elems
+            if top:
+                c.bytes += out_bytes + opnd_bytes
+            return c
+
+        # everything else: 1 flop per output element
+        c.flops += float(out_elems)
+        if top:
+            c.bytes += out_bytes + opnd_bytes
+        return c
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    model = HloCostModel(hlo_text)
+    cost = model.cost()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collectives": dict(cost.coll),
+        "collective_bytes": float(sum(cost.coll.values())),
+    }

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation — the dry-run lowers/compiles against these.
+Also exposes the logical-axis trees for batch/cache inputs so the
+dry-run can build NamedShardings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Batch ShapeDtypeStructs for a train/prefill cell."""
+    b, t = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sd((b, t), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = _sd((b, t), jnp.int32)
+    if cfg.is_enc_dec:
+        batch["frames"] = _sd((b, cfg.frontend_len, cfg.d_model),
+                              jnp.float32)
+    if cfg.frontend == "vision":
+        batch["patches"] = _sd((b, cfg.frontend_len, cfg.d_model),
+                               jnp.float32)
+    return batch
+
+
+def input_logical(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Logical axis names matching input_specs."""
+    batch = {"tokens": ("batch", "seq")}
+    if shape.kind == "train":
+        batch["labels"] = ("batch", "seq")
+    if cfg.is_enc_dec:
+        batch["frames"] = ("batch", None, None)
+    if cfg.frontend == "vision":
+        batch["patches"] = ("batch", None, None)
+    return batch
+
+
+def decode_token_specs(cfg: ArchConfig, shape: ShapeSpec):
+    b = shape.global_batch
+    return (_sd((b, 1), jnp.int32), ("batch", None))
+
+
+def rng_spec():
+    return jax.eval_shape(lambda: jax.random.key(0))

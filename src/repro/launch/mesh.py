@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module does not touch jax device state — the dry-run must set XLA_FLAGS
+before the first jax call.
+
+Production topology (TPU v5e target):
+  single pod:  (data=16, model=16)            = 256 chips
+  multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+The ``pod`` axis carries only data parallelism (gradient all-reduce over
+DCN); ``model`` stays inside the pod's ICI domain.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    data = n // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,169 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+    compute   = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory    = HLO_bytes / (chips x HBM_bw)
+    collective= collective_bytes / (chips x link_bw)
+
+cost_analysis() reports the per-device program (post-SPMD), so FLOPs /
+bytes are already per-chip; collective bytes are parsed from the
+compiled HLO (operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (values given in the task brief).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes / s / chip
+LINK_BW = 50e9          # bytes / s / link
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64|s16|u16)"
+                       r"\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4,
+                "u32": 4, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+                "u64": 8, "s16": 2, "u16": 2}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes per collective kind (per-device program).
+
+    ``-start``/``-done`` async pairs are counted once (the -start op).
+    """
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start():m.end()]
+        if "-done" in line:
+            continue
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_hbm: float
+    bytes_collective: float
+    coll_breakdown: dict
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_collective / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def summary(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.bytes_hbm,
+            "collective_bytes_per_chip": self.bytes_collective,
+            "coll_breakdown": self.coll_breakdown,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+        }
+
+
+def analyze(compiled, chips: int) -> Roofline:
+    """Trip-count-aware analysis of the per-device compiled program.
+
+    Uses repro.launch.hlo_cost (lax.scan bodies x trip count); XLA's own
+    cost_analysis() counts while bodies once and is kept only as the
+    ``xla_*`` cross-check fields.
+    """
+    from repro.launch.hlo_cost import analyze_hlo
+    res = analyze_hlo(compiled.as_text())
+    return Roofline(flops=res["flops"], bytes_hbm=res["bytes"],
+                    bytes_collective=res["collective_bytes"],
+                    coll_breakdown=res["collectives"],
+                    chips=chips)
+
+
+def estimate_tpu_peak(cfg, shape, chips: int, tp: int, accum: int,
+                      arg_bytes: int) -> float:
+    """Analytic per-device HBM peak for the TPU target.
+
+    The CPU-backend ``memory_analysis().temp_size_in_bytes`` is inflated
+    by layout-change copies of stacked weights that XLA:TPU's
+    layout-aware fusion does not materialize (EXPERIMENTS.md §Dry-run
+    shows both numbers).  Model:
+
+      peak = args (params/opt/cache, exact, post-donation)
+           + grad buffer (train: params_bytes in accum dtype)
+           + scan carries (train: L x microbatch residual, seq/TP-sharded)
+           + transient working set (~4 x largest layer activation)
+           + loss chunk logits (train: 2 x B_loc x chunk x V/tp x 4B)
+    """
+    dp = chips // tp
+    d, L = cfg.d_model, cfg.n_layers + cfg.encoder_layers
+    if shape.kind == "train":
+        b_micro = max(1, shape.global_batch // accum)
+        b_loc = max(1, b_micro // dp)
+        t_loc = max(1, shape.seq_len // tp)
+        carry = L * b_loc * t_loc * d * 2
+        grad_buf = cfg.n_params() * 2 // chips
+        act = 4 * b_loc * shape.seq_len * max(d, cfg.d_ff // tp) * 2
+        loss = 2 * max(1, shape.global_batch // dp) * 512 \
+            * (cfg.vocab_padded // tp) * 4 // max(1, accum)
+        return float(arg_bytes + grad_buf + carry + act + loss)
+    # inference: args dominate (params + cache); add transients
+    b_loc = max(1, shape.global_batch // dp)
+    act = 4 * b_loc * min(shape.seq_len, 4096) * d * 2
+    return float(arg_bytes + act)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), D = tokens.
+
+    For decode steps D = global_batch (one token per sequence); training
+    counts fwd+bwd (6ND); inference counts 2ND.
+    """
+    n = cfg.n_params_active()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token / seq

@@ -1,0 +1,62 @@
+"""Serving step builders (decode + prefill) for jit/lowering."""
+
+from __future__ import annotations
+
+from repro.models.transformer import Model
+
+
+def make_serve_step(model: Model):
+    """decode: (params, tokens [B,1], cache, cache_len) ->
+    (logits [B, Vp], cache')."""
+
+    def serve_step(params, tokens, cache, cache_len):
+        return model.decode_step(params, tokens, cache, cache_len)
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    """prefill: (params, batch) -> (last logits, cache, cache_len)."""
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def main() -> None:
+    """CLI launcher: serve any assigned architecture (reduced size on
+    CPU) with the continuous-batching engine.
+
+    python -m repro.launch.serve --arch mixtral-8x22b --requests 6
+    """
+    import argparse
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, list_configs, reduced
+    from repro.serving import Request, ServingEngine
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_configs())
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    model = Model(cfg, dtype=jnp.float32, attn_chunk=16)
+    params = model.init_params(jax.random.key(0))
+    eng = ServingEngine(model, params, n_slots=args.slots, max_len=128)
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3],
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    eng.run(reqs, max_steps=2000)
+    print(f"{cfg.name}: {sum(r.done for r in reqs)}/{len(reqs)} done, "
+          f"{eng.tokens_out} tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Training step builder: microbatch accumulation + optimizer update.
+
+``make_train_step(model, opt, accum_steps)`` returns a pure function
+    step(params, opt_state, batch, rng) -> (params', opt_state', metrics)
+suitable for jit with in/out shardings (see launch/dryrun.py) and for the
+fault-tolerant loop (repro.runtime.train_loop).
+
+Gradient accumulation reshapes the global batch [B, ...] into
+[A, B/A, ...] and lax.scan's over microbatches, accumulating grads in
+``accum_dtype`` (bf16 halves the grad-buffer footprint for the 100B+
+archs; stochastic-rounding AdamW makes that loss of precision safe —
+see repro.optim.adamw).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, current_mesh
+from repro.distributed.specs import param_logical_tree
+from repro.models.transformer import Model
+from repro.optim.adamw import AdamW
+
+
+def _constrain_like_params(grads, params):
+    """Pin gradient shardings to the parameter layout at the point of
+    production.  Without this the SPMD partitioner materializes full
+    per-layer gradients and all-reduces them replicated (observed:
+    12.7 GB x n_layers x n_micro on llama3-405b) instead of
+    reduce-scattering into the ZeRO-3 layout."""
+    if current_mesh() is None:
+        return grads
+    logical = param_logical_tree(params)
+    return jax.tree.map(lambda g, names: constrain(g, *names),
+                        grads, logical)
+
+
+def make_train_step(model: Model, opt: AdamW, *, accum_steps: int = 1,
+                    accum_dtype: Any = jnp.bfloat16):
+    def loss_fn(params, micro):
+        return model.loss(params, micro)
+
+    def grad_fn(params, micro):
+        loss, grads = jax.value_and_grad(loss_fn)(params, micro)
+        return loss, _constrain_like_params(grads, params)
+
+    def train_step(params, opt_state, batch, rng):
+        if accum_steps == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                a = accum_steps
+                return x.reshape((a, x.shape[0] // a) + x.shape[1:])
+
+            micro_batches = jax.tree.map(split, batch)
+
+            def body(acc, micro):
+                loss_sum, g_acc = acc
+                loss, g = grad_fn(params, micro)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (loss_sum + loss, g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0), g0), micro_batches)
+            loss = loss_sum / accum_steps
+            # stay in accum_dtype: /accum is exact for power-of-2 steps,
+            # and a tree-wide f32 upcast would transiently double the
+            # grad footprint
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+
+        new_params, new_state = opt.apply(grads, opt_state, params,
+                                          rng=rng)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": new_state["step"]}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def main() -> None:
+    """CLI launcher: train any assigned architecture.
+
+    python -m repro.launch.train --arch gemma3-1b --steps 5 --reduced
+    (--reduced instantiates the smoke-sized config; without it the full
+    config is built — only sensible on real hardware.)
+    """
+    import argparse
+
+    from repro.configs import get_config, list_configs, reduced
+    from repro.data import ShardedLoader, SyntheticTokens
+    from repro.optim import AdamWConfig, cosine_schedule
+    from repro.runtime import TrainLoop, TrainLoopConfig
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_configs())
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-sized config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="default: /tmp/repro_train_ckpt/<arch>")
+    args = ap.parse_args()
+    if args.ckpt_dir is None:
+        args.ckpt_dir = f"/tmp/repro_train_ckpt/{args.arch}"
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    print(f"{cfg.name}: {cfg.n_params()/1e6:.1f}M params")
+    model = Model(cfg, dtype=jnp.float32 if args.reduced else jnp.bfloat16,
+                  loss_chunk=min(256, args.seq),
+                  attn_chunk=min(512, args.seq))
+    opt = AdamW(AdamWConfig(lr=cosine_schedule(
+        args.lr, warmup_steps=5, total_steps=args.steps)))
+    params = model.init_params(jax.random.key(0))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt,
+                                      accum_steps=args.accum))
+
+    src = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          batch_size=args.batch, seed=0)
+    loader = ShardedLoader(src.batch, prefetch=2)
+
+    def batch_fn(step):
+        b = loader.get(step)
+        out = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.is_enc_dec:
+            out["frames"] = jnp.zeros(
+                (args.batch, cfg.frontend_len, cfg.d_model))
+        if cfg.frontend == "vision":
+            out["patches"] = jnp.zeros(
+                (args.batch, cfg.frontend_len, cfg.d_model))
+        return out
+
+    loop = TrainLoop(step_fn, TrainLoopConfig(
+        total_steps=args.steps, checkpoint_every=max(5, args.steps // 3)),
+        args.ckpt_dir, batch_fn=batch_fn)
+    loop.run((params, opt_state))
+    if loop.metrics_log:
+        print(f"loss {loop.metrics_log[0]['loss']:.3f} -> "
+              f"{loop.metrics_log[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro.models — the LM model zoo (assigned architectures).
+
+Functional JAX (no framework dependency): params are pytrees, models are
+pure functions.  A single config-driven ``transformer.Model`` covers all
+10 assigned architectures (dense / GQA / MoE / SSM / hybrid / enc-dec /
+stub-frontend VLM+audio); see repro.configs for the exact configs.
+"""
+
+from repro.models.transformer import Model
+
+__all__ = ["Model"]

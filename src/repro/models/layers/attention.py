@@ -1,0 +1,251 @@
+"""GQA attention: chunked (flash-style) XLA path + decode-with-cache.
+
+Three execution paths, all matching ``repro.kernels.ref.attention_ref``:
+
+* ``chunked_attention`` — lax.scan over kv blocks with online softmax.
+  Never materializes the [Tq, Tk] score matrix, so 32k-token prefill fits
+  HBM.  This is what the multi-pod dry-run lowers (pure XLA -> SPMD
+  partitionable).
+* ``repro.kernels.flash_attention`` — the Pallas TPU kernel (same math,
+  single-chip deployment path; selected with ``use_pallas=True``).
+* ``decode_attention`` — one-token query against a KV cache laid out
+  [B, Hkv, S, D].  The cache sequence axis is sharded over the `model`
+  mesh axis (flash-decode); XLA inserts the small max/sum all-reduces.
+
+Weights layout: fused qkv projection [d, (Hq + 2*Hkv) * Dh] so one matmul
+produces q/k/v (fewer, larger MXU ops).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.rope import apply_rope
+
+_NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: int | None = None     # sliding-window size (None = full)
+    causal: bool = True           # False for encoder self-attention
+    use_bias: bool = False
+    chunk_k: int = 1024           # kv block for the chunked path
+    use_rope: bool = True
+
+
+def init(key, cfg: AttnConfig, dtype=jnp.bfloat16) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2 = jax.random.split(key)
+    std = d ** -0.5
+    p = {
+        "wqkv": (jax.random.normal(k1, (d, (hq + 2 * hkv) * hd)) * std
+                 ).astype(dtype),
+        "wo": (jax.random.normal(k2, (hq * hd, d)) * (hq * hd) ** -0.5
+               ).astype(dtype),
+    }
+    if cfg.use_bias:
+        p["bqkv"] = jnp.zeros(((hq + 2 * hkv) * hd,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _split_qkv(params, x, cfg: AttnConfig):
+    """x: [B, T, d] -> q [B, Hq, T, Dh], k/v [B, Hkv, T, Dh]."""
+    b, t, _ = x.shape
+    qkv = x @ params["wqkv"]
+    if cfg.use_bias:
+        qkv = qkv + params["bqkv"]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = jnp.split(qkv, [hq * hd, (hq + hkv) * hd], axis=-1)
+    q = q.reshape(b, t, hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, hkv, hd).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, chunk_k=1024,
+                      q_offset=0):
+    """Online-softmax attention, scanning kv chunks.
+
+    q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D].  ``q_offset``: absolute
+    position of q[...,0,:] minus that of k[...,0,:] (prefill: Tk - Tq).
+    """
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    group = hq // hkv
+    scale = d ** -0.5
+    chunk_k = min(chunk_k, tk)
+    tk_valid = tk
+    if tk % chunk_k:
+        pad = chunk_k - tk % chunk_k
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        tk = k.shape[2]
+    nk = tk // chunk_k
+
+    qf = q.astype(jnp.float32) * scale
+    qg = qf.reshape(b, hkv, group, tq, d)
+    kc = k.astype(jnp.float32).reshape(b, hkv, nk, chunk_k, d)
+    vc = v.astype(jnp.float32).reshape(b, hkv, nk, chunk_k, d)
+    kc = jnp.moveaxis(kc, 2, 0)  # [nk, B, Hkv, C, D]
+    vc = jnp.moveaxis(vc, 2, 0)
+
+    q_pos = jnp.arange(tq) + q_offset  # absolute positions of queries
+
+    def body(carry, inp):
+        acc, m, l = carry
+        j, kj, vj = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kj)
+        k_pos = j * chunk_k + jnp.arange(chunk_k)
+        mask = jnp.broadcast_to(k_pos[None, :] < tk_valid, (tq, chunk_k))
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vj)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, hkv, group, tq, d), jnp.float32)
+    m0 = jnp.full((b, hkv, group, tq, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, tq, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.arange(nk), kc, vc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l).reshape(b, hq, tq, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None):
+    """Single-token attention over a cache.
+
+    q: [B, Hq, 1, D]; caches: [B, Hkv, S, D]; cache_len: int32[] OR
+    int32[B] (per-sequence — continuous batching) number of valid
+    positions (the new token's kv must already be written at position
+    cache_len - 1).
+    """
+    b, hq, _, d = q.shape
+    hkv = k_cache.shape[1]
+    group = hq // hkv
+    s_len = k_cache.shape[2]
+    scale = d ** -0.5
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 1:
+        cl = cl[:, None, None, None]
+    qg = (q.astype(jnp.float32) * scale).reshape(b, hkv, group, d)
+    kf = k_cache.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, kf)
+    k_pos = jnp.arange(s_len)
+    mask = k_pos[None, None, None, :] < cl
+    if window is not None:
+        mask &= k_pos[None, None, None, :] > cl - 1 - window
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# --- full layer forward passes ------------------------------------------------
+
+
+def forward(params, x, cfg: AttnConfig, *, positions=None, kv_x=None,
+            return_kv: bool = False):
+    """Training / prefill self- (or cross-) attention.
+
+    x: [B, T, d].  kv_x: encoder output for cross-attention (no rope,
+    no causal mask).  Returns [B, T, d], or (y, (k, v)) when
+    ``return_kv`` (k/v post-rope, [B, Hkv, T, D] — prefill cache fill).
+    """
+    b, t, _ = x.shape
+    if kv_x is None:
+        q, k, v = _split_qkv(params, x, cfg)
+        if positions is None:
+            positions = jnp.arange(t)
+        if cfg.use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        out = chunked_attention(q, k, v, causal=cfg.causal,
+                                window=cfg.window, chunk_k=cfg.chunk_k,
+                                q_offset=0)
+    else:
+        # cross-attention: q from x, kv from encoder stream
+        q, _, _ = _split_qkv(params, x, cfg)
+        _, k, v = _split_qkv(params, kv_x, cfg)
+        out = chunked_attention(q, k, v, causal=False, window=None,
+                                chunk_k=cfg.chunk_k)
+    y = out.transpose(0, 2, 1, 3).reshape(b, t, -1) @ params["wo"]
+    if cfg.use_bias:
+        y = y + params["bo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def init_cache(batch: int, cfg: AttnConfig, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Sliding-window layers allocate only ``window`` slots and decode
+    with a ring buffer — a 500k-context mixtral cache is bounded by the
+    4096-token window instead of the sequence length."""
+    alloc = max_len if cfg.window is None else min(max_len, cfg.window)
+    shape = (batch, cfg.n_kv_heads, alloc, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params, x, cache, cache_len, cfg: AttnConfig):
+    """One decode step.  x: [B, 1, d]; cache_len: int32[] tokens already
+    in the cache (the new token sits at index cache_len).
+
+    Returns (y [B, 1, d], new_cache).
+    """
+    b = x.shape[0]
+    s_alloc = cache["k"].shape[2]
+    ring = cfg.window is not None and s_alloc == cfg.window
+    per_seq = jnp.ndim(cache_len) == 1  # continuous batching
+    q, k, v = _split_qkv(params, x, cfg)
+    if cfg.use_rope:
+        if per_seq:
+            from repro.models.layers.rope import apply_rope_per_batch
+            q = apply_rope_per_batch(q, cache_len, cfg.rope_theta)
+            k = apply_rope_per_batch(k, cache_len, cfg.rope_theta)
+        else:
+            pos = jnp.full((1,), cache_len, jnp.int32)
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+    slot = cache_len % s_alloc if ring else cache_len
+    if per_seq:
+        upd = jax.vmap(
+            lambda c, kk, s: jax.lax.dynamic_update_slice_in_dim(
+                c, kk, s, axis=1))
+        k_cache = upd(cache["k"], k.astype(cache["k"].dtype), slot)
+        v_cache = upd(cache["v"], v.astype(cache["v"].dtype), slot)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+    if ring:
+        # ring holds exactly the window; mask only during warm-up
+        valid = jnp.minimum(cache_len + 1, s_alloc)
+        out = decode_attention(q, k_cache, v_cache, valid, window=None)
+    else:
+        out = decode_attention(q, k_cache, v_cache, cache_len + 1,
+                               window=cfg.window)
+    y = out.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ params["wo"]
+    if cfg.use_bias:
+        y = y + params["bo"]
+    return y, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,141 @@
+"""Mamba (selective SSM) mixer — jamba's recurrent layer.
+
+Faithful selective-SSM dataflow (Gu & Dao 2023 / Jamba): in-projection to
+(x, z), short causal depthwise conv, data-dependent (Δ, B, C) from x,
+diagonal selective scan over time, gated out-projection.  State is O(1)
+in sequence length, which is what qualifies jamba for ``long_500k``.
+
+Train/prefill uses an associative scan over time (O(log T) depth);
+decode carries (conv_state, ssm_state) explicitly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_inner: int          # expansion (2x d_model in jamba)
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0      # 0 -> ceil(d_model / 16)
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or max(1, self.d_model // 16)
+
+
+def init(key, cfg: MambaConfig, dtype=jnp.bfloat16) -> dict:
+    d, di, ds, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.rank
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * d ** -0.5
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, r + 2 * ds)) * di ** -0.5
+                   ).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (r, di)) * r ** -0.5
+                    ).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),                             # [di, ds] f32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * di ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def _ssm_params(params, xc, cfg: MambaConfig):
+    """xc: [..., T, di] conv output -> (dt, B, C) data-dependent."""
+    r, ds = cfg.rank, cfg.d_state
+    proj = xc @ params["x_proj"]                       # [..., T, r+2ds]
+    dt_r, Bm, Cm = jnp.split(proj, [r, r + ds], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_r @ params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])                           # [..., T, di]
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def forward(params: dict, x: jnp.ndarray, cfg: MambaConfig,
+            return_state: bool = False):
+    """x: [B, T, d] -> [B, T, d] (train / prefill path).
+
+    return_state=True additionally returns the decode cache (conv tail +
+    final ssm state)."""
+    b, t, _ = x.shape
+    di, ds, dc = cfg.d_inner, cfg.d_state, cfg.d_conv
+    xz = x @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                  # [B, T, di] each
+
+    # causal depthwise conv (kernel dc)
+    xpad = jnp.pad(xi, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + t, :] * params["conv_w"][i]
+             for i in range(dc)) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dt, Bm, Cm = _ssm_params(params, xc, cfg)
+    A = -jnp.exp(params["A_log"])                      # [di, ds]
+    # discretize: a_t = exp(dt * A), b_t = dt * B_t * x_t
+    a = jnp.exp(dt[..., None] * A)                     # [B, T, di, ds]
+    bx = (dt * xc.astype(jnp.float32))[..., None] * Bm[..., None, :]
+
+    # associative scan over T: s_t = a_t * s_{t-1} + bx_t
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    a_s = jnp.moveaxis(a, 1, 0)
+    b_s = jnp.moveaxis(bx, 1, 0)
+    _, s = jax.lax.associative_scan(combine, (a_s, b_s), axis=0)
+    s = jnp.moveaxis(s, 0, 1)                          # [B, T, di, ds]
+
+    y = jnp.einsum("btds,bts->btd", s, Cm)             # [B, T, di]
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    if return_state:
+        cache = {"conv": xi[:, t - (dc - 1):, :].astype(x.dtype),
+                 "ssm": s[:, -1]}
+        return out, cache
+    return out
+
+
+def init_cache(batch: int, cfg: MambaConfig, dtype=jnp.bfloat16) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def decode_step(params: dict, x: jnp.ndarray, cache: dict,
+                cfg: MambaConfig) -> tuple[jnp.ndarray, dict]:
+    """x: [B, 1, d] -> (y [B, 1, d], cache')."""
+    b = x.shape[0]
+    di, ds, dc = cfg.d_inner, cfg.d_state, cfg.d_conv
+    xz = x @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                  # [B, 1, di]
+
+    hist = jnp.concatenate([cache["conv"], xi.astype(cache["conv"].dtype)],
+                           axis=1)                     # [B, dc, di]
+    xc = jnp.einsum("bcd,cd->bd", hist, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc)[:, None, :]                   # [B, 1, di]
+
+    dt, Bm, Cm = _ssm_params(params, xc, cfg)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt[:, 0, :, None] * A)                 # [B, di, ds]
+    bx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+        * Bm[:, 0, None, :]
+    s = cache["ssm"] * a + bx                          # [B, di, ds]
+
+    y = jnp.einsum("bds,bs->bd", s, Cm[:, 0])
+    y = y + params["D"] * xc[:, 0].astype(jnp.float32)
+    y = y[:, None, :].astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], {"conv": hist[:, 1:], "ssm": s}

@@ -1,0 +1,35 @@
+"""Feed-forward blocks: SwiGLU (modern LMs) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu_init(key, d: int, ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": (jax.random.normal(k1, (d, ff)) * d ** -0.5).astype(dtype),
+        "wg": (jax.random.normal(k2, (d, ff)) * d ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(k3, (ff, d)) * ff ** -0.5).astype(dtype),
+    }
+
+
+def swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    return h @ params["wo"]
+
+
+def gelu_mlp_init(key, d: int, ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": (jax.random.normal(k1, (d, ff)) * d ** -0.5).astype(dtype),
+        "bi": jnp.zeros((ff,), dtype),
+        "wo": (jax.random.normal(k2, (ff, d)) * ff ** -0.5).astype(dtype),
+        "bo": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(x @ params["wi"] + params["bi"])
+    return h @ params["wo"] + params["bo"]

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts (top-k routing, capacity-bounded scatter dispatch).
+
+Dispatch strategy (see DESIGN.md §5): tokens are scatter-packed into an
+[E, C, d] buffer (C = capacity per expert), experts run as one batched
+einsum over E with the expert FFN dim sharded over the `model` mesh axis
+(tensor parallelism inside every expert — no all-to-all in the baseline;
+expert-parallel all-to-all is evaluated separately in §Perf).  Tokens
+over capacity are dropped (standard capacity-factor semantics); the
+router uses softmax-then-top-k with gate renormalization as in Mixtral.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+
+
+def init(key, cfg: MoEConfig, dtype=jnp.bfloat16) -> dict:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": (jax.random.normal(kr, (d, e)) * d ** -0.5
+                   ).astype(jnp.float32),
+        "wi": (jax.random.normal(k1, (e, d, ff)) * d ** -0.5).astype(dtype),
+        "wg": (jax.random.normal(k2, (e, d, ff)) * d ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(k3, (e, ff, d)) * ff ** -0.5).astype(dtype),
+    }
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)  # sublane-aligned
+
+
+def forward(params: dict, x: jnp.ndarray, cfg: MoEConfig
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, T, d] -> (y [B, T, d], aux_loss scalar).
+
+    aux_loss is the standard load-balancing loss (mean_prob * mean_assign
+    * E), used by the training step.
+    """
+    b, t, d = x.shape
+    n = b * t
+    e, k = cfg.n_experts, cfg.top_k
+    cap = capacity(n, cfg)
+    xf = x.reshape(n, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])          # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                           # [N, k]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)           # renorm
+
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)              # [N, k, E]
+    flat = onehot.reshape(n * k, e)
+    pos_flat = jnp.cumsum(flat, axis=0) - 1                       # [N*k, E]
+    pos = jnp.sum(pos_flat.reshape(n, k, e) * onehot, axis=-1)    # [N, k]
+    keep = pos < cap                                              # [N, k]
+
+    # scatter tokens into [E, C, d]
+    e_idx = jnp.where(keep, idx, e)        # overflow -> dropped row
+    c_idx = jnp.where(keep, pos, cap)
+    buf = jnp.zeros((e + 1, cap + 1, d), x.dtype)
+    xk = jnp.broadcast_to(xf[:, None, :], (n, k, d))
+    buf = buf.at[e_idx.reshape(-1), c_idx.reshape(-1)].add(
+        xk.reshape(n * k, d))
+    buf = buf[:e, :cap]                                           # [E, C, d]
+
+    # batched expert FFN (SwiGLU), E leading dim
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    y_e = jnp.einsum("ecf,efd->ecd", h, params["wo"])             # [E, C, d]
+
+    # gather back + weighted combine
+    y_tok = y_e[jnp.minimum(e_idx, e - 1), jnp.minimum(c_idx, cap - 1)]
+    y_tok = jnp.where(keep[..., None], y_tok, 0.0)                # [N, k, d]
+    y = jnp.sum(y_tok * gate[..., None].astype(y_tok.dtype), axis=1)
+
+    # load-balancing auxiliary loss
+    me = jnp.mean(probs, axis=0)                                   # [E]
+    ce = jnp.mean(jnp.sum(onehot, axis=1).astype(jnp.float32), axis=0)
+    aux = jnp.sum(me * ce) * e
+
+    return y.reshape(b, t, d), aux

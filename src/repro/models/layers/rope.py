@@ -1,0 +1,41 @@
+"""Rotary position embeddings (RoPE)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies, float32[head_dim // 2]."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [..., T, D] (D even); positions: int32[T] absolute positions."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # [D/2]
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]  # [T, D/2]
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope_per_batch(x: jnp.ndarray, positions: jnp.ndarray,
+                         theta: float = 10000.0) -> jnp.ndarray:
+    """Decode variant: x [B, H, 1, D], positions int32[B] (per-sequence
+    cache lengths — continuous batching)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # [D/2]
+    ang = (positions.astype(jnp.float32)[:, None, None, None]
+           * inv[None, None, None, :])               # [B,1,1,D/2]
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,211 @@
+"""RWKV-6 "Finch" mixer: attention-free, data-dependent per-channel decay.
+
+Time-mixing recurrence (per head, head size N):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with data-dependent decay w_t = exp(-exp(wf_t)) produced by a low-rank
+MLP from the token-shifted input (the "Finch" change vs RWKV-5's static
+decay), and bonus u for the current token.
+
+State is O(1) in T (heads x N x N per layer), which qualifies rwkv6-7b
+for ``long_500k``.  Train/prefill uses lax.scan over time; decode carries
+(shift, state).  Token-shift interpolation and the r/k/v/g projections
+follow the published architecture; fine low-rank sizes are reduced-rank
+faithful approximations (documented in DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    head_size: int = 64
+    decay_rank: int = 64      # low-rank bottleneck for the decay MLP
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_size
+
+
+def init(key, cfg: RWKV6Config, dtype=jnp.bfloat16) -> dict:
+    d, hs = cfg.d_model, cfg.head_size
+    ks = jax.random.split(key, 8)
+    std = d ** -0.5
+    return {
+        # token-shift interpolation weights (per-channel, for r/k/v/g/w)
+        "mu": (0.5 * jnp.ones((5, d))).astype(jnp.float32),
+        "wr": (jax.random.normal(ks[0], (d, d)) * std).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, d)) * std).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, d)) * std).astype(dtype),
+        "wg": (jax.random.normal(ks[3], (d, d)) * std).astype(dtype),
+        # data-dependent decay: low-rank MLP d -> rank -> d
+        "wd1": (jax.random.normal(ks[4], (d, cfg.decay_rank)) * std
+                ).astype(dtype),
+        "wd2": (jax.random.normal(ks[5], (cfg.decay_rank, d))
+                * cfg.decay_rank ** -0.5).astype(dtype),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "bonus": (jax.random.normal(ks[6], (cfg.n_heads, hs)) * 0.1
+                  ).astype(jnp.float32),
+        "wo": (jax.random.normal(ks[7], (d, d)) * std).astype(dtype),
+        "ln_scale": jnp.ones((d,), jnp.float32),  # per-head group norm
+    }
+
+
+def _mix(x, x_prev, mu):
+    """Token shift: lerp(current, previous, mu)."""
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _projections(params, x, x_prev, cfg: RWKV6Config):
+    """x, x_prev: [..., d] -> r, k, v, g [..., H, N], w decay [..., H, N]."""
+    h, n = cfg.n_heads, cfg.head_size
+    mu = params["mu"]
+    r = _mix(x, x_prev, mu[0]) @ params["wr"]
+    k = _mix(x, x_prev, mu[1]) @ params["wk"]
+    v = _mix(x, x_prev, mu[2]) @ params["wv"]
+    g = _mix(x, x_prev, mu[3]) @ params["wg"]
+    xw = _mix(x, x_prev, mu[4])
+    wf = jnp.tanh(xw @ params["wd1"]) @ params["wd2"]
+    w = jnp.exp(-jnp.exp(wf.astype(jnp.float32) + params["decay_base"]))
+    shp = x.shape[:-1]
+    return (r.reshape(*shp, h, n), k.reshape(*shp, h, n),
+            v.reshape(*shp, h, n), g.reshape(*shp, h, n),
+            w.reshape(*shp, h, n))
+
+
+def _group_norm(params, o, cfg: RWKV6Config):
+    """Per-head RMS normalization of the output."""
+    var = jnp.mean(o * o, axis=-1, keepdims=True)
+    o = o * jax.lax.rsqrt(var + 1e-6)
+    return o.reshape(*o.shape[:-2], cfg.d_model) * params["ln_scale"]
+
+
+def forward(params: dict, x: jnp.ndarray, cfg: RWKV6Config,
+            return_state: bool = False):
+    """x: [B, T, d] -> [B, T, d] (train / prefill).
+
+    return_state=True additionally returns the decode cache."""
+    b, t, d = x.shape
+    h, n = cfg.n_heads, cfg.head_size
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :t]
+    r, k, v, g, w = _projections(params, x, x_prev, cfg)
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u = params["bonus"]                                 # [H, N]
+
+    def body(state, inp):
+        rt, kt, vt, wt = inp                            # [B, H, N]
+        kv = kt[..., :, None] * vt[..., None, :]        # [B, H, N, N]
+        out = jnp.einsum("bhn,bhnm->bhm", rt, state + u[..., None] * kv)
+        state = wt[..., None] * state + kv
+        return state, out
+
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    seq = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+           jnp.moveaxis(vf, 1, 0), jnp.moveaxis(w, 1, 0))
+    s_fin, o = jax.lax.scan(body, s0, seq)              # [T, B, H, N]
+    o = jnp.moveaxis(o, 0, 1)                           # [B, T, H, N]
+    o = _group_norm(params, o, cfg).astype(x.dtype)
+    out = (o * jax.nn.silu(g.reshape(b, t, d))) @ params["wo"]
+    if return_state:
+        return out, {"shift": x[:, -1], "state": s_fin}
+    return out
+
+
+def forward_chunked(params: dict, x: jnp.ndarray, cfg: RWKV6Config,
+                    chunk: int = 32, return_state: bool = False):
+    """Chunked (blocked) RWKV6 recurrence — §Perf hillclimb A.
+
+    The per-timestep scan round-trips the O(H x N x N) state through
+    HBM every step (T x per layer); this formulation carries the state
+    only ACROSS chunks and handles within-chunk interactions with a
+    masked decay-weighted attention matrix (the flash-linear-attention
+    chunk form).  State traffic drops by the chunk length (~32x) and
+    the inner work becomes batched einsums.
+
+    Numerical safety: all decay exponentials are differences
+    L_a - L_b with a >= b along time, hence <= 0 -> exp() in (0, 1].
+
+    Identity with ``forward`` is asserted in tests/test_rwkv_chunked.py.
+    """
+    b, t, d = x.shape
+    h, n = cfg.n_heads, cfg.head_size
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :t]
+    r, k, v, g, w = _projections(params, x, x_prev, cfg)
+    u = params["bonus"]                                  # [H, N]
+
+    def resh(a):  # [B, T, H, N] -> [nc, B, C, H, N]
+        return jnp.moveaxis(
+            a.reshape(b, nc, chunk, h, n), 1, 0)
+
+    rf, kf, vf = (resh(a.astype(jnp.float32)) for a in (r, k, v))
+    logw = jnp.log(jnp.maximum(resh(w), 1e-38))          # w in (0,1)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # s < t
+
+    def chunk_body(S, inp):
+        rc, kc, vc, lw = inp                  # [B, C, H, N] each
+        L = jnp.cumsum(lw, axis=1)            # L_t = sum_{s<=t} log w_s
+        Lprev = L - lw                        # L_{t-1}
+        # cross-chunk: o_t += (r_t * exp(L_{t-1})) @ S
+        r_dec = rc * jnp.exp(Lprev)
+        o_cross = jnp.einsum("bthn,bhnm->bthm", r_dec, S)
+        # intra-chunk (s < t): D[t,s,n] = exp(L_{t-1,n} - L_{s,n}) <= 1
+        diff = Lprev[:, :, None] - L[:, None]           # [B,C,C,H,N]
+        D = jnp.exp(jnp.minimum(diff, 0.0))
+        att = jnp.einsum("bthn,bshn,btshn->btsh", rc, kc, D)
+        att = att * tri[None, :, :, None]
+        o_intra = jnp.einsum("btsh,bshn->bthn", att, vc)
+        # bonus (current token): (r_t . u k_t) v_t
+        o_bonus = jnp.sum(rc * u * kc, axis=-1,
+                          keepdims=True) * vc
+        # state to end of chunk: S' = diag(exp L_C) S + sum_t k'_t (x) v_t
+        k_dec = kc * jnp.exp(L[:, -1:] - L)   # <= k (exponent <= 0)
+        S = (jnp.exp(L[:, -1])[..., None] * S
+             + jnp.einsum("bthn,bthm->bhnm", k_dec, vc))
+        return S, o_cross + o_intra + o_bonus
+
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    s_fin, o = jax.lax.scan(chunk_body, s0, (rf, kf, vf, logw))
+    o = jnp.moveaxis(o, 0, 1).reshape(b, t, h, n)        # [B, T, H, N]
+    o = _group_norm(params, o, cfg).astype(x.dtype)
+    out = (o * jax.nn.silu(g.reshape(b, t, d))) @ params["wo"]
+    if return_state:
+        return out, {"shift": x[:, -1], "state": s_fin}
+    return out
+
+
+def init_cache(batch: int, cfg: RWKV6Config, dtype=jnp.bfloat16) -> dict:
+    return {
+        "shift": jnp.zeros((batch, cfg.d_model), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_size,
+                            cfg.head_size), jnp.float32),
+    }
+
+
+def decode_step(params: dict, x: jnp.ndarray, cache: dict,
+                cfg: RWKV6Config) -> tuple[jnp.ndarray, dict]:
+    """x: [B, 1, d] -> (y [B, 1, d], cache')."""
+    b, _, d = x.shape
+    xt = x[:, 0]
+    r, k, v, g, w = _projections(params, xt,
+                                 cache["shift"].astype(xt.dtype), cfg)
+    u = params["bonus"]
+    kv = k.astype(jnp.float32)[..., :, None] \
+        * v.astype(jnp.float32)[..., None, :]
+    out = jnp.einsum("bhn,bhnm->bhm", r.astype(jnp.float32),
+                     cache["state"] + u[..., None] * kv)
+    state = w[..., None] * cache["state"] + kv
+    o = _group_norm(params, out, cfg).astype(x.dtype)
+    y = (o * jax.nn.silu(g.reshape(b, d))) @ params["wo"]
+    return y[:, None, :], {"shift": xt.astype(cache["shift"].dtype),
+                           "state": state}

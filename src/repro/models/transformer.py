@@ -1,0 +1,587 @@
+"""Config-driven transformer covering all assigned architectures.
+
+One ``Model`` class handles dense / GQA / SWA / MoE / Mamba-hybrid /
+RWKV / encoder-decoder / stub-frontend (audio, vision) variants, driven
+entirely by :class:`repro.configs.ArchConfig`.
+
+Key structural choices (rationale in DESIGN.md §5):
+
+* **scan-over-layers**: the layer pattern is factored into its smallest
+  repeating super-block (``configs.scan_grouping``); params are stacked
+  per sub-layer position and the stack is ``lax.scan``'d.  126-layer
+  llama3 lowers one super-block, not 126 copies — compile time and HLO
+  size stay bounded.
+* **chunked attention** (no [T, T] scores) and **chunked cross-entropy**
+  (no [B, T, V] logits) keep 32k-token prefill and 262k-vocab losses
+  inside v5e HBM.
+* **logical-axis sharding constraints** (repro.distributed.sharding) at
+  layer boundaries; the same code runs unsharded in tests.
+* decode paths carry explicit caches (KV / conv+ssm / rwkv state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerKind, layer_kinds, scan_grouping
+from repro.distributed.sharding import constrain
+from repro.models.layers import attention as attn
+from repro.models.layers import mamba as mamba_l
+from repro.models.layers import mlp as mlp_l
+from repro.models.layers import moe as moe_l
+from repro.models.layers import norm as norm_l
+from repro.models.layers import rwkv6 as rwkv_l
+
+
+def cache_out(dec_cache, enc_out=None) -> dict:
+    cache: dict = {"decoder": dec_cache}
+    if enc_out is not None:
+        cache["enc_out"] = enc_out
+    return cache
+
+
+def _norm_init(cfg: ArchConfig, d: int) -> dict:
+    return (norm_l.layernorm_init(d) if cfg.norm == "ln"
+            else norm_l.rmsnorm_init(d))
+
+
+def _norm_apply(cfg: ArchConfig, p: dict, x):
+    return (norm_l.layernorm(p, x) if cfg.norm == "ln"
+            else norm_l.rmsnorm(p, x))
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    loss_chunk: int = 512
+    attn_chunk: int = 1024
+    rwkv_chunk: int = 0   # >0: blocked RWKV6 recurrence (§Perf A)
+
+    # --- config plumbing ---------------------------------------------------
+
+    def attn_cfg(self, kind: LayerKind, causal=True) -> attn.AttnConfig:
+        c = self.cfg
+        return attn.AttnConfig(
+            d_model=c.d_model, n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+            head_dim=c.hd, rope_theta=c.rope_theta,
+            window=(c.window if kind.mixer == "attn_window" else None),
+            causal=causal, use_bias=c.use_bias, chunk_k=self.attn_chunk,
+            use_rope=c.use_rope)
+
+    def mamba_cfg(self) -> mamba_l.MambaConfig:
+        c = self.cfg
+        return mamba_l.MambaConfig(d_model=c.d_model,
+                                   d_inner=2 * c.d_model,
+                                   d_state=c.d_state)
+
+    def rwkv_cfg(self) -> rwkv_l.RWKV6Config:
+        c = self.cfg
+        return rwkv_l.RWKV6Config(d_model=c.d_model,
+                                  head_size=c.rwkv_head_size)
+
+    def moe_cfg(self) -> moe_l.MoEConfig:
+        c = self.cfg
+        return moe_l.MoEConfig(d_model=c.d_model, d_ff=c.d_ff,
+                               n_experts=c.n_experts, top_k=c.top_k,
+                               capacity_factor=c.capacity_factor)
+
+    @property
+    def pos_emb(self) -> str:
+        c = self.cfg
+        if c.use_rope:
+            return "rope"
+        return "learned" if c.is_enc_dec else "none"
+
+    # --- init ----------------------------------------------------------------
+
+    def _init_sublayer(self, key, kind: LayerKind, causal=True) -> dict:
+        c = self.cfg
+        ks = jax.random.split(key, 6)
+        p: dict = {"ln1": _norm_init(c, c.d_model)}
+        if kind.mixer.startswith("attn"):
+            p["mixer"] = attn.init(ks[0], self.attn_cfg(kind, causal),
+                                   self.dtype)
+        elif kind.mixer == "mamba":
+            p["mixer"] = mamba_l.init(ks[0], self.mamba_cfg(), self.dtype)
+        elif kind.mixer == "rwkv":
+            p["mixer"] = rwkv_l.init(ks[0], self.rwkv_cfg(), self.dtype)
+        if kind.cross_attn:
+            p["ln_cross"] = _norm_init(c, c.d_model)
+            p["cross"] = attn.init(ks[1], self.attn_cfg(kind, causal=False),
+                                   self.dtype)
+        p["ln2"] = _norm_init(c, c.d_model)
+        if kind.ffn == "moe":
+            p["ffn"] = moe_l.init(ks[2], self.moe_cfg(), self.dtype)
+        else:
+            p["ffn"] = (mlp_l.gelu_mlp_init(ks[2], c.d_model, c.d_ff,
+                                            self.dtype)
+                        if c.act == "gelu" else
+                        mlp_l.swiglu_init(ks[2], c.d_model, c.d_ff,
+                                          self.dtype))
+        return p
+
+    def _init_stack(self, key, kinds: list[LayerKind], causal=True) -> dict:
+        period, reps, rem = scan_grouping(kinds)
+        keys = jax.random.split(key, period * reps + rem)
+
+        scan_params = []
+        for s in range(period):
+            # stack the params of sub-position s across all repeats
+            per_rep = [self._init_sublayer(keys[r * period + s], kinds[s],
+                                           causal)
+                       for r in range(reps)]
+            scan_params.append(
+                jax.tree.map(lambda *a: jnp.stack(a), *per_rep)
+                if reps > 1 else
+                jax.tree.map(lambda a: a[None], per_rep[0]))
+        rem_params = [
+            self._init_sublayer(keys[period * reps + i],
+                                kinds[reps * period + i], causal)
+            for i in range(rem)]
+        return {"scan": scan_params, "rem": rem_params}
+
+    def init_params(self, key) -> dict:
+        c = self.cfg
+        ks = jax.random.split(key, 8)
+        vp = c.vocab_padded
+        params: dict = {
+            "embed": (jax.random.normal(ks[0], (vp, c.d_model))
+                      * c.d_model ** -0.5).astype(self.dtype),
+            "final_norm": _norm_init(c, c.d_model),
+            "decoder": self._init_stack(ks[1], layer_kinds(c)),
+        }
+        if not c.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(ks[2], (c.d_model, vp))
+                * c.d_model ** -0.5).astype(self.dtype)
+        if self.pos_emb == "learned":
+            params["pos_embed"] = (
+                jax.random.normal(ks[3], (c.max_seq_len, c.d_model))
+                * 0.02).astype(self.dtype)
+        if c.is_enc_dec:
+            enc_kinds = layer_kinds(c, c.encoder_layers, decoder=False)
+            params["encoder"] = self._init_stack(ks[4], enc_kinds,
+                                                 causal=False)
+            params["enc_final_norm"] = _norm_init(c, c.d_model)
+            params["enc_pos"] = (
+                jax.random.normal(ks[5], (c.frontend_len, c.d_model))
+                * 0.02).astype(self.dtype)
+        return params
+
+    # --- forward sub-layer -----------------------------------------------------
+
+    def _apply_sublayer(self, p: dict, x, kind: LayerKind, *, causal=True,
+                        positions=None, enc_out=None, cache_max_len=None):
+        """One pre-norm sub-layer.  cache_max_len != None -> prefill mode
+        (returns the decode cache alongside)."""
+        c = self.cfg
+        collect = cache_max_len is not None
+        cache: dict = {}
+        h = _norm_apply(c, p["ln1"], x)
+        h = constrain(h, "batch", "mix_seq", "embed")
+        if kind.mixer.startswith("attn"):
+            out = attn.forward(p["mixer"], h, self.attn_cfg(kind, causal),
+                               positions=positions, return_kv=collect)
+            if collect:
+                h, (k, v) = out
+                acfg = self.attn_cfg(kind, causal)
+                alloc = (cache_max_len if acfg.window is None
+                         else min(cache_max_len, acfg.window))
+                t = k.shape[2]
+                if t <= alloc:
+                    pad = alloc - t
+                    cache["kv"] = {
+                        "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad),
+                                         (0, 0))),
+                        "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad),
+                                         (0, 0)))}
+                else:
+                    # ring buffer: last `alloc` tokens at slot pos%alloc
+                    dest = (jnp.arange(alloc) + (t - alloc)) % alloc
+                    cache["kv"] = {
+                        "k": jnp.zeros_like(k[:, :, :alloc]
+                                            ).at[:, :, dest].set(
+                                                k[:, :, -alloc:]),
+                        "v": jnp.zeros_like(v[:, :, :alloc]
+                                            ).at[:, :, dest].set(
+                                                v[:, :, -alloc:])}
+            else:
+                h = out
+        elif kind.mixer == "mamba":
+            out = mamba_l.forward(p["mixer"], h, self.mamba_cfg(),
+                                  return_state=collect)
+            if collect:
+                h, cache["mamba"] = out
+            else:
+                h = out
+        elif kind.mixer == "rwkv":
+            ck = self.rwkv_chunk
+            if ck and h.shape[1] % ck == 0 and h.shape[1] > ck:
+                out = rwkv_l.forward_chunked(p["mixer"], h,
+                                             self.rwkv_cfg(), chunk=ck,
+                                             return_state=collect)
+            else:
+                out = rwkv_l.forward(p["mixer"], h, self.rwkv_cfg(),
+                                     return_state=collect)
+            if collect:
+                h, cache["rwkv"] = out
+            else:
+                h = out
+        x = x + h
+        x = constrain(x, "batch", "res_seq", "embed")
+        if kind.cross_attn and enc_out is not None:
+            h = _norm_apply(c, p["ln_cross"], x)
+            out = attn.forward(p["cross"], h, self.attn_cfg(kind, False),
+                               kv_x=enc_out, return_kv=collect)
+            if collect:
+                h, (ck, cv) = out
+                cache["cross"] = {"k": ck, "v": cv}
+            else:
+                h = out
+            x = x + h
+        h = _norm_apply(c, p["ln2"], x)
+        h = constrain(h, "batch", "mix_seq", "embed")
+        aux = jnp.float32(0)
+        if kind.ffn == "moe":
+            h, aux = moe_l.forward(p["ffn"], h, self.moe_cfg())
+        elif c.act == "gelu":
+            h = mlp_l.gelu_mlp(p["ffn"], h)
+        else:
+            h = mlp_l.swiglu(p["ffn"], h)
+        x = x + h
+        x = constrain(x, "batch", "res_seq", "embed")
+        if collect:
+            return x, aux, cache
+        return x, aux
+
+    def _apply_stack(self, stack: dict, x, kinds: list[LayerKind], *,
+                     causal=True, positions=None, enc_out=None,
+                     cache_max_len=None):
+        period, reps, rem = scan_grouping(kinds)
+        collect = cache_max_len is not None
+
+        def superblock(x, slice_params):
+            aux = jnp.float32(0)
+            caches = []
+            for s in range(period):
+                out = self._apply_sublayer(
+                    slice_params[s], x, kinds[s], causal=causal,
+                    positions=positions, enc_out=enc_out,
+                    cache_max_len=cache_max_len)
+                if collect:
+                    x, a, cc = out
+                    caches.append(cc)
+                else:
+                    x, a = out
+                aux = aux + a
+            return x, aux, caches
+
+        body = superblock
+        if self.remat and not collect:
+            def body(x, sp):  # noqa: F811
+                f = jax.checkpoint(
+                    lambda xx, pp: superblock(xx, pp)[:2],
+                    policy=jax.checkpoint_policies.nothing_saveable)
+                y, a = f(x, sp)
+                return y, a, []
+
+        def scan_fn(carry, slice_params):
+            x, aux = carry
+            x, a, caches = body(x, slice_params)
+            return (x, aux + a), (caches if collect else None)
+
+        (x, aux), scan_caches = jax.lax.scan(
+            scan_fn, (x, jnp.float32(0)), stack["scan"])
+        rem_caches = []
+        for i in range(rem):
+            out = self._apply_sublayer(
+                stack["rem"][i], x, kinds[period * reps + i],
+                causal=causal, positions=positions, enc_out=enc_out,
+                cache_max_len=cache_max_len)
+            if collect:
+                x, a, cc = out
+                rem_caches.append(cc)
+            else:
+                x, a = out
+            aux = aux + a
+        if collect:
+            return x, aux, {"scan": scan_caches, "rem": rem_caches}
+        return x, aux
+
+    # --- embedding / heads -----------------------------------------------------
+
+    def _embed(self, params, tokens, offset: int = 0):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        if self.pos_emb == "learned":
+            t = tokens.shape[1]
+            pos = jax.lax.dynamic_slice_in_dim(params["pos_embed"], offset,
+                                               t, axis=0)
+            x = x + pos
+        return constrain(x, "batch", "res_seq", "embed")
+
+    def _encode(self, params, frames):
+        """Encoder pass over stub frontend embeddings [B, F, d]."""
+        c = self.cfg
+        x = frames.astype(self.dtype) + params["enc_pos"][None]
+        kinds = layer_kinds(c, c.encoder_layers, decoder=False)
+        x, _ = self._apply_stack(params["encoder"], x, kinds, causal=False)
+        return _norm_apply(c, params["enc_final_norm"], x)
+
+    def _head_matrix(self, params):
+        if self.cfg.tie_embeddings:
+            # the embedding table is sharded (vocab->data, d->model) for
+            # the lookup; its head use wants the transpose-compatible
+            # (d->data, vocab->model).  Reshard ONCE here (hoisted out
+            # of the loss-chunk scan) — without this the partitioner
+            # replicates full-vocab logits per chunk (~8.6 GB each).
+            return constrain(params["embed"].T, "p_in", "vocab")
+        return params["lm_head"]
+
+    def _logits(self, params, h):
+        """h: [B, T, d] -> logits [B, T, Vp] (small T only: decode)."""
+        w = self._head_matrix(params)
+        logits = (h @ w).astype(jnp.float32)
+        vp, v = self.cfg.vocab_padded, self.cfg.vocab_size
+        if vp != v:
+            neg = jnp.full((vp - v,), -1e30, jnp.float32)
+            logits = logits.at[..., v:].set(neg)
+        # vocab gets the model axis here even under sequence-parallel
+        # rules (the chunk seq dim is short; sharding it wastes the mesh)
+        return constrain(logits, "batch", None, "vocab")
+
+    def _chunked_loss(self, params, h, labels, mask=None):
+        """Cross-entropy without materializing [B, T, V] logits."""
+        # under sequence-parallel rules, gather seq here: the loss wants
+        # (batch->data, vocab->model); leaving seq on the model axis
+        # forces an involuntary full rematerialization in the backward
+        h = constrain(h, "batch", None, "embed")
+        b, t, d = h.shape
+        chunk = min(self.loss_chunk, t)
+        assert t % chunk == 0, (t, chunk)
+        n = t // chunk
+        w = self._head_matrix(params)
+        v = self.cfg.vocab_size
+
+        def one(h_c, y_c, m_c):
+            logits = (h_c @ w).astype(jnp.float32)
+            logits = constrain(logits, "batch", None, "vocab")
+            if self.cfg.vocab_padded != v:
+                logits = logits.at[..., v:].set(-1e30)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, y_c[..., None],
+                                       axis=-1)[..., 0]
+            return jnp.sum((lse - gold) * m_c), jnp.sum(m_c)
+
+        one = jax.checkpoint(one)
+
+        def body(carry, xs):
+            h_c, y_c, m_c = xs
+            s, cnt = one(h_c, y_c, m_c)
+            return (carry[0] + s, carry[1] + cnt), None
+
+        hs = jnp.moveaxis(h.reshape(b, n, chunk, d), 1, 0)
+        ys = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+        if mask is None:
+            mask = jnp.ones_like(labels, jnp.float32)
+        ms = jnp.moveaxis(mask.reshape(b, n, chunk), 1, 0)
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                     (hs, ys, ms))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    # --- public entry points -----------------------------------------------------
+
+    def forward_hidden(self, params, batch: dict):
+        """Run the decoder stack -> hidden states [B, T, d] (+ aux loss)."""
+        c = self.cfg
+        enc_out = None
+        prefix = None
+        if c.is_enc_dec:
+            enc_out = self._encode(params, batch["frames"])
+        if c.frontend == "vision":
+            prefix = batch["patches"].astype(self.dtype)
+        x = self._embed(params, batch["tokens"])
+        if prefix is not None:
+            x = jnp.concatenate([prefix, x], axis=1)
+            x = constrain(x, "batch", "res_seq", "embed")
+        positions = jnp.arange(x.shape[1])
+        x, aux = self._apply_stack(params["decoder"], x,
+                                   layer_kinds(c), causal=True,
+                                   positions=positions, enc_out=enc_out)
+        x = _norm_apply(c, params["final_norm"], x)
+        if prefix is not None:
+            x = x[:, prefix.shape[1]:]
+        return x, aux
+
+    def loss(self, params, batch: dict):
+        """Mean next-token cross-entropy (+ MoE aux)."""
+        h, aux = self.forward_hidden(params, batch)
+        ce = self._chunked_loss(params, h, batch["labels"],
+                                batch.get("loss_mask"))
+        return ce + 0.01 * aux
+
+    # --- decode ------------------------------------------------------------------
+
+    def _init_layer_cache(self, kind: LayerKind, batch: int, max_len: int):
+        c = self.cfg
+        cache: dict = {}
+        if kind.mixer.startswith("attn"):
+            cache["kv"] = attn.init_cache(batch, self.attn_cfg(kind),
+                                          max_len, self.dtype)
+        elif kind.mixer == "mamba":
+            cache["mamba"] = mamba_l.init_cache(batch, self.mamba_cfg(),
+                                                self.dtype)
+        elif kind.mixer == "rwkv":
+            cache["rwkv"] = rwkv_l.init_cache(batch, self.rwkv_cfg(),
+                                              self.dtype)
+        if kind.cross_attn:
+            cache["cross"] = attn.init_cache(batch, self.attn_cfg(kind),
+                                             c.frontend_len, self.dtype)
+        return cache
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        kinds = layer_kinds(self.cfg)
+        period, reps, rem = scan_grouping(kinds)
+        scan_caches = []
+        for s in range(period):
+            one = self._init_layer_cache(kinds[s], batch, max_len)
+            scan_caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None],
+                                           (reps,) + a.shape).copy()
+                if reps > 1 else a[None], one))
+        rem_caches = [self._init_layer_cache(kinds[period * reps + i],
+                                             batch, max_len)
+                      for i in range(rem)]
+        cache = {"decoder": {"scan": scan_caches, "rem": rem_caches}}
+        if self.cfg.is_enc_dec:
+            cache["enc_out"] = jnp.zeros(
+                (batch, self.cfg.frontend_len, self.cfg.d_model),
+                self.dtype)
+        return cache
+
+    def _decode_sublayer(self, p, x, kind: LayerKind, cache, cache_len,
+                         enc_out):
+        c = self.cfg
+        h = _norm_apply(c, p["ln1"], x)
+        new_cache = dict(cache)
+        if kind.mixer.startswith("attn"):
+            h, kv = attn.decode_step(p["mixer"], h, cache["kv"], cache_len,
+                                     self.attn_cfg(kind))
+            new_cache["kv"] = kv
+        elif kind.mixer == "mamba":
+            h, mc = mamba_l.decode_step(p["mixer"], h, cache["mamba"],
+                                        self.mamba_cfg())
+            new_cache["mamba"] = mc
+        elif kind.mixer == "rwkv":
+            h, rc = rwkv_l.decode_step(p["mixer"], h, cache["rwkv"],
+                                       self.rwkv_cfg())
+            new_cache["rwkv"] = rc
+        x = x + h
+        if kind.cross_attn:
+            h = _norm_apply(c, p["ln_cross"], x)
+            acfg = self.attn_cfg(kind, causal=False)
+            q, _, _ = attn._split_qkv(p["cross"], h, acfg)
+            out = attn.decode_attention(q, cache["cross"]["k"],
+                                        cache["cross"]["v"],
+                                        jnp.int32(c.frontend_len))
+            b = x.shape[0]
+            h = out.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ \
+                p["cross"]["wo"]
+            if acfg.use_bias:
+                h = h + p["cross"]["bo"]
+            x = x + h
+        h = _norm_apply(c, p["ln2"], x)
+        if kind.ffn == "moe":
+            h, _ = moe_l.forward(p["ffn"], h, self.moe_cfg())
+        elif c.act == "gelu":
+            h = mlp_l.gelu_mlp(p["ffn"], h)
+        else:
+            h = mlp_l.swiglu(p["ffn"], h)
+        x = x + h
+        return x, new_cache
+
+    def decode_step(self, params, tokens, cache, cache_len):
+        """One serving step.  tokens: int32[B, 1]; cache_len: int32[].
+
+        Returns (logits f32[B, Vp], new_cache).
+        """
+        c = self.cfg
+        kinds = layer_kinds(c)
+        period, reps, rem = scan_grouping(kinds)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        if self.pos_emb == "learned":
+            if jnp.ndim(cache_len) == 1:  # per-sequence lengths
+                pos = jnp.take(params["pos_embed"], cache_len,
+                               axis=0)[:, None, :]
+            else:
+                pos = jax.lax.dynamic_slice_in_dim(
+                    params["pos_embed"], cache_len, 1, axis=0)
+            x = x + pos
+        enc_out = cache.get("enc_out")
+
+        def scan_fn(carry, xs):
+            x = carry
+            slice_params, slice_cache = xs
+            aux_caches = []
+            for s in range(period):
+                x, nc = self._decode_sublayer(
+                    slice_params[s], x, kinds[s], slice_cache[s],
+                    cache_len, enc_out)
+                aux_caches.append(nc)
+            return x, aux_caches
+
+        x, new_scan_cache = jax.lax.scan(
+            scan_fn, x, (params["decoder"]["scan"],
+                         cache["decoder"]["scan"]))
+        rem_caches = []
+        for i in range(rem):
+            x, nc = self._decode_sublayer(
+                params["decoder"]["rem"][i], x, kinds[period * reps + i],
+                cache["decoder"]["rem"][i], cache_len, enc_out)
+            rem_caches.append(nc)
+        x = _norm_apply(c, params["final_norm"], x)
+        logits = self._logits(params, x)[:, 0]
+        new_cache = dict(cache)
+        new_cache["decoder"] = {"scan": new_scan_cache, "rem": rem_caches}
+        return logits, new_cache
+
+    def prefill(self, params, batch: dict, max_len: int, lengths=None):
+        """Process a prompt, build the decode cache.
+
+        batch: {"tokens": [B, T], + frontend inputs}.  ``lengths``
+        (int32[B], optional) = true prompt lengths when T is a padded
+        bucket; last-token logits are gathered per sequence.  Returns
+        (logits f32[B, Vp] for the last valid position, cache,
+        cache_len).
+        """
+        c = self.cfg
+        enc_out = None
+        prefix = None
+        if c.is_enc_dec:
+            enc_out = self._encode(params, batch["frames"])
+        if c.frontend == "vision":
+            prefix = batch["patches"].astype(self.dtype)
+        x = self._embed(params, batch["tokens"])
+        if prefix is not None:
+            x = jnp.concatenate([prefix, x], axis=1)
+            x = constrain(x, "batch", "res_seq", "embed")
+        t_total = x.shape[1]
+        positions = jnp.arange(t_total)
+        x, _, dec_cache = self._apply_stack(
+            params["decoder"], x, layer_kinds(c), causal=True,
+            positions=positions, enc_out=enc_out, cache_max_len=max_len)
+        x = _norm_apply(c, params["final_norm"], x)
+        if lengths is not None:
+            last = jnp.take_along_axis(
+                x, (lengths - 1)[:, None, None].astype(jnp.int32)
+                .clip(0), axis=1)
+            logits = self._logits(params, last)[:, 0]
+            return logits, cache_out(dec_cache, enc_out), lengths
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, cache_out(dec_cache, enc_out), jnp.int32(t_total)

@@ -1,0 +1,8 @@
+"""repro.optim — optimizers, schedules, gradient compression."""
+
+from repro.optim.adamw import AdamW, AdamWConfig
+from repro.optim.compression import onebit_compress, onebit_decompress
+from repro.optim.schedule import cosine_schedule
+
+__all__ = ["AdamW", "AdamWConfig", "cosine_schedule", "onebit_compress",
+           "onebit_decompress"]

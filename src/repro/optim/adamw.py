@@ -1,0 +1,140 @@
+"""AdamW with low-precision optimizer states and stochastic rounding.
+
+The paper's binary *stochastic* STDP (clear/set a 1-bit weight with an
+LFSR-driven probability) generalizes to **stochastic rounding under a
+precision budget**: an update too small to represent still lands with
+the right probability.  We apply that insight framework-wide:
+
+* ``state_dtype=bfloat16`` keeps Adam's m/v in bf16 (2+2 bytes/param),
+* ``param_dtype=bfloat16`` + ``stochastic_rounding=True`` drops the fp32
+  master copy entirely — updates are stochastically rounded onto the
+  bf16 grid, so tiny LR x grad increments are not systematically lost.
+
+Under full ZeRO-3 sharding this is 8 bytes/param total (param + grad +
+m + v, all bf16), which is what fits llama3-405b training on a single
+256-chip v5e pod (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32        # m/v storage dtype
+    stochastic_rounding: bool = False      # bf16 params w/o master copy
+
+
+def _stochastic_round_bf16(x: jnp.ndarray, key) -> jnp.ndarray:
+    """f32 -> bf16 with probability proportional to the residual."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    noise = jax.random.bits(key, x.shape, dtype=jnp.uint32) & jnp.uint32(0xFFFF)
+    rounded = (bits + noise) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(rounded, jnp.float32
+                                        ).astype(jnp.bfloat16)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    cfg: AdamWConfig = AdamWConfig()
+
+    def init(self, params) -> dict:
+        dt = self.cfg.state_dtype
+        zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, step):
+        lr = self.cfg.lr
+        return lr(step) if callable(lr) else jnp.float32(lr)
+
+    # leaves above this many elements update via lax.scan over axis 0
+    # (layer-stacked tensors), bounding f32 temporaries to one slice —
+    # a tree-wide elementwise update would materialize f32 copies of
+    # every stacked leaf simultaneously (~10 GB/leaf on llama3-405b).
+    _SCAN_THRESHOLD = 1 << 24
+
+    def apply(self, grads, state, params, *, rng=None):
+        """Returns (new_params, new_state).  ``rng`` required when
+        stochastic_rounding is on."""
+        c = self.cfg
+        step = state["step"] + 1
+        lr = self._lr(step)
+
+        # global-norm clip; square fuses into the reduction (no f32 copy)
+        gsq = sum(jnp.sum(jnp.square(g), dtype=jnp.float32)
+                  for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, c.grad_clip / (gnorm + 1e-9))
+
+        bc1 = 1 - c.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - c.b2 ** step.astype(jnp.float32)
+
+        flat_params, treedef = jax.tree.flatten(params)
+        flat_grads = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+
+        if c.stochastic_rounding:
+            if rng is None:
+                raise ValueError("stochastic_rounding requires rng")
+            keys = list(jax.random.split(rng, len(flat_params)))
+        else:
+            keys = [None] * len(flat_params)
+
+        def update_slice(p, g, m, v, k, decay: bool):
+            gf = g.astype(jnp.float32) * scale
+            mf = c.b1 * m.astype(jnp.float32) + (1 - c.b1) * gf
+            vf = c.b2 * v.astype(jnp.float32) + (1 - c.b2) * gf * gf
+            upd = (mf / bc1) / (jnp.sqrt(vf / bc2) + c.eps)
+            pf = p.astype(jnp.float32)
+            if decay:
+                upd = upd + c.weight_decay * pf
+            pf = pf - lr * upd
+            if c.stochastic_rounding and p.dtype == jnp.bfloat16:
+                p_new = _stochastic_round_bf16(pf, k)
+            else:
+                p_new = pf.astype(p.dtype)
+            return p_new, mf.astype(c.state_dtype), vf.astype(c.state_dtype)
+
+        new_p, new_m, new_v = [], [], []
+        for p, g, m, v, k in zip(flat_params, flat_grads, flat_m, flat_v,
+                                 keys):
+            decay = p.ndim >= 2  # decay matrices only (standard)
+            if p.size >= self._SCAN_THRESHOLD and p.ndim >= 3:
+                ks = (jax.random.split(k, p.shape[0]) if k is not None
+                      else jnp.zeros((p.shape[0],), jnp.uint32))
+
+                def body(_, xs, decay=decay, use_key=k is not None):
+                    pi, gi, mi, vi, ki = xs
+                    out = update_slice(pi, gi, mi, vi,
+                                       ki if use_key else None, decay)
+                    return 0, out
+
+                _, (pn, mn, vn) = jax.lax.scan(
+                    body, 0, (p, g, m, v, ks))
+            else:
+                pn, mn, vn = update_slice(p, g, m, v, k, decay)
+            new_p.append(pn)
+            new_m.append(mn)
+            new_v.append(vn)
+
+        return (jax.tree.unflatten(treedef, new_p), {
+            "m": jax.tree.unflatten(treedef, new_m),
+            "v": jax.tree.unflatten(treedef, new_v),
+            "step": step,
+        })

@@ -1,0 +1,5 @@
+"""repro.runtime — fault-tolerant training loop, straggler watchdog."""
+
+from repro.runtime.train_loop import SimulatedFailure, TrainLoop, TrainLoopConfig
+
+__all__ = ["SimulatedFailure", "TrainLoop", "TrainLoopConfig"]

@@ -1,0 +1,5 @@
+"""repro.serving — batched serving engine with continuous batching."""
+
+from repro.serving.engine import Request, ServingEngine
+
+__all__ = ["Request", "ServingEngine"]

@@ -1,0 +1,159 @@
+"""Continuous-batching serving engine.
+
+vLLM-style slot scheduler over a single batched KV cache:
+
+* fixed ``n_slots`` decode batch; every engine step decodes ONE token
+  for every active slot (per-slot cache lengths — new requests join
+  mid-flight without stalling running ones);
+* prompt admission runs a B=1 prefill (exact length — recurrent archs'
+  states must not see pad tokens) and splices the resulting cache into
+  the slot via batch-axis scatter (batch axes derived from the cache's
+  logical spec tree);
+* slots free on EOS / max_tokens and are immediately reusable.
+
+Decoder-only archs (dense / MoE / SSM / hybrid / VLM-with-prefix); the
+whisper enc-dec path is exercised by its own example instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.specs import cache_logical_tree
+from repro.models.transformer import Model
+from repro.serving import sampler as smp
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    eos_id: int = -1                  # -1: never stops early
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    slot: int = -1
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, n_slots: int = 4,
+                 max_len: int = 512, temperature: float = 0.0,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.cache = model.init_cache(n_slots, max_len)
+        logical = cache_logical_tree(
+            jax.eval_shape(lambda: model.init_cache(n_slots, max_len)))
+        self._batch_axis = jax.tree.map(
+            lambda names: names.index("batch") if "batch" in names else 0,
+            logical, is_leaf=lambda x: isinstance(x, tuple))
+        self.cache_len = np.zeros((n_slots,), np.int32)
+        self.last_token = np.zeros((n_slots,), np.int32)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.queue: deque[Request] = deque()
+        self.key = jax.random.key(seed)
+        self._decode = jax.jit(model.decode_step)
+        self._prefills: dict[int, callable] = {}
+        self.steps = 0
+        self.tokens_out = 0
+
+    # --- admission -----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_fn(self, length: int):
+        if length not in self._prefills:
+            self._prefills[length] = jax.jit(
+                lambda p, b: self.model.prefill(p, b, self.max_len))
+        return self._prefills[length]
+
+    def _splice(self, slot: int, one_cache) -> None:
+        """Write a B=1 cache into batch position ``slot``."""
+        def put(big, small, axis):
+            idx = [slice(None)] * big.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return big.at[tuple(idx)].set(small.astype(big.dtype))
+
+        self.cache = jax.tree.map(put, self.cache, one_cache,
+                                  self._batch_axis)
+
+    def _admit(self) -> None:
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.popleft()
+            toks = jnp.asarray([req.prompt], jnp.int32)
+            logits, cache1, clen = self._prefill_fn(len(req.prompt))(
+                self.params, {"tokens": toks})
+            tok = self._sample(logits)[0]
+            self._splice(slot, cache1)
+            self.cache_len[slot] = int(clen)
+            self.last_token[slot] = int(tok)
+            req.slot = slot
+            req.output.append(int(tok))
+            self.slot_req[slot] = req
+            self.tokens_out += 1
+            self._finish_if_done(req)
+
+    # --- decode --------------------------------------------------------------
+
+    def _sample(self, logits) -> np.ndarray:
+        if self.temperature <= 0.0:
+            return np.asarray(smp.greedy(logits))
+        self.key, k = jax.random.split(self.key)
+        return np.asarray(smp.temperature(k, logits, self.temperature))
+
+    def _finish_if_done(self, req: Request) -> None:
+        if req.done or req.slot < 0:
+            return
+        if (len(req.output) >= req.max_new_tokens
+                or req.output[-1] == req.eos_id
+                or self.cache_len[req.slot] >= self.max_len - 1):
+            req.done = True
+            self.slot_req[req.slot] = None
+            req.slot = -1
+
+    def step(self) -> int:
+        """One engine iteration: admit + batched decode.  Returns the
+        number of tokens produced."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        tokens = jnp.asarray(self.last_token[:, None], jnp.int32)
+        clen = jnp.asarray(self.cache_len, jnp.int32)
+        logits, self.cache = self._decode(self.params, tokens, self.cache,
+                                          clen)
+        toks = self._sample(logits)
+        produced = 0
+        for i in active:
+            req = self.slot_req[i]
+            self.cache_len[i] += 1
+            self.last_token[i] = int(toks[i])
+            req.output.append(int(toks[i]))
+            produced += 1
+            self._finish_if_done(req)
+        self.steps += 1
+        self.tokens_out += produced
+        return produced
+
+    def run(self, requests: list[Request], max_steps: int = 10_000
+            ) -> list[Request]:
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while (any(not r.done for r in requests)
+               and steps < max_steps):
+            self.step()
+            steps += 1
+        return requests

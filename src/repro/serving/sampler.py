@@ -1,0 +1,22 @@
+"""Token samplers for the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    """logits [B, V] -> tokens int32[B]."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(key, logits: jnp.ndarray, temp: float = 1.0,
+                top_k: int = 0) -> jnp.ndarray:
+    """Temperature (+ optional top-k) sampling.  logits [B, V] -> [B]."""
+    l = logits / max(temp, 1e-6)
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(l, top_k)
+        cutoff = vals[:, -1:]
+        l = jnp.where(l < cutoff, -jnp.inf, l)
+    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)

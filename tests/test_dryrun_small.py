@@ -1,0 +1,147 @@
+"""Dry-run machinery on a small (8-device) mesh, in a subprocess.
+
+Validates the full lowering path the production dry-run uses —
+param/batch/cache spec trees -> NamedShardings -> jit lower + compile —
+without the 512-device compile cost.
+"""
+
+import subprocess
+import sys
+import textwrap
+
+
+def _run(code: str) -> str:
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       cwd="/root/repo", capture_output=True, text=True,
+                       timeout=560)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    return r.stdout
+
+
+def test_train_step_lowers_on_small_mesh():
+    out = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config, reduced
+        from repro.distributed import sharding as shd
+        from repro.distributed.specs import param_logical_tree, to_shardings
+        from repro.launch.train import make_train_step
+        from repro.models.transformer import Model
+        from repro.optim import AdamW, AdamWConfig
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = reduced(get_config("mixtral-8x22b"))  # MoE path
+        model = Model(cfg, dtype=jnp.bfloat16, attn_chunk=16,
+                      loss_chunk=16)
+        opt = AdamW(AdamWConfig())
+        rules = shd.use_rules()
+        with shd.use_mesh(mesh, rules):
+            ps = jax.eval_shape(lambda: model.init_params(jax.random.key(0)))
+            p_sh = to_shardings(mesh, rules, param_logical_tree(ps), ps)
+            os_ = jax.eval_shape(opt.init, ps)
+            none = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            o_sh = {"m": p_sh, "v": p_sh, "step": none}
+            b = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+            b_sh = {"tokens": jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec("data", None)),
+                    "labels": jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec("data", None))}
+            step = make_train_step(model, opt, accum_steps=2)
+            rng = jax.eval_shape(lambda: jax.random.key(0))
+            co = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh, none),
+                         donate_argnums=(0, 1)).lower(ps, os_, b, rng
+                                                      ).compile()
+            mem = co.memory_analysis()
+            assert mem.argument_size_in_bytes > 0
+            print("LOWER_OK", mem.argument_size_in_bytes)
+    """)
+    assert "LOWER_OK" in out
+
+
+def test_train_step_executes_sharded():
+    """Not just lowering: a real sharded execution converges."""
+    out = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.distributed import sharding as shd
+        from repro.distributed.specs import param_logical_tree, to_shardings
+        from repro.launch.train import make_train_step
+        from repro.models.transformer import Model
+        from repro.optim import AdamW, AdamWConfig
+        from repro.data import SyntheticTokens
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = reduced(get_config("starcoder2-3b"))
+        model = Model(cfg, dtype=jnp.float32, attn_chunk=16, loss_chunk=16)
+        opt = AdamW(AdamWConfig(lr=1e-3))
+        rules = shd.use_rules(**shd.SEQPAR_RULES_OVERRIDES)
+        src = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32,
+                              batch_size=8, seed=0)
+        with shd.use_mesh(mesh, rules):
+            params = model.init_params(jax.random.key(0))
+            p_log = param_logical_tree(params)
+            p_sh = to_shardings(mesh, rules, p_log, params)
+            params = jax.device_put(params, p_sh)
+            state = opt.init(params)
+            step = jax.jit(make_train_step(model, opt))
+            losses = []
+            for i in range(8):
+                b = {k: jnp.asarray(v) for k, v in src.batch(i).items()}
+                params, state, m = step(params, state, b,
+                                        jax.random.key(i))
+                losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], losses
+        print("TRAIN_OK", losses[0], "->", losses[-1])
+    """)
+    assert "TRAIN_OK" in out
+
+
+def test_compressed_dp_step_shard_map():
+    """1-bit gradient sync (paper C3 -> DP) under shard_map trains."""
+    out = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.optim.compression import compressed_psum, init_error
+
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        w_true = np.linspace(-1, 1, 16).astype(np.float32)
+
+        def local_grad(w, x, y):
+            def loss(w):
+                return jnp.mean((x @ w - y) ** 2)
+            return jax.grad(loss)(w)
+
+        def dp_step(w, err, x, y):
+            g = local_grad(w, x, y)
+            g_sync, err = compressed_psum({"w": g}, err, "data")
+            return w - 0.05 * g_sync["w"], err
+
+        step = jax.jit(jax.shard_map(
+            dp_step, mesh=mesh,
+            in_specs=(P(), {"w": P()}, P("data"), P("data")),
+            out_specs=(P(), {"w": P()})))
+
+        rng = np.random.default_rng(0)
+        w = jnp.zeros((16,))
+        err = init_error({"w": w})
+        for i in range(150):
+            x = rng.normal(size=(64, 16)).astype(np.float32)
+            y = x @ w_true
+            w, err = step(w, err, jnp.asarray(x), jnp.asarray(y))
+        final = float(jnp.mean((w - w_true) ** 2))
+        assert final < 0.05, final
+        print("DP1BIT_OK", final)
+    """)
+    assert "DP1BIT_OK" in out

@@ -1,0 +1,62 @@
+"""Flash-attention Pallas kernel vs dense reference (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import attention_ref
+
+
+def _qkv(key, b, hq, hkv, tq, tk, d, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, hq, tq, d), dtype)
+    k = jax.random.normal(k2, (b, hkv, tk, d), dtype)
+    v = jax.random.normal(k3, (b, hkv, tk, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,hq,hkv,t,d", [
+    (1, 2, 2, 128, 64),
+    (2, 4, 2, 256, 64),   # GQA group 2
+    (1, 8, 1, 128, 128),  # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_prefill_matches_ref(b, hq, hkv, t, d, causal):
+    q, k, v = _qkv(jax.random.key(0), b, hq, hkv, t, t, d)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_sliding_window_matches_ref(window):
+    q, k, v = _qkv(jax.random.key(1), 1, 4, 2, 256, 256, 64)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16_close_to_f32_ref():
+    q, k, v = _qkv(jax.random.key(2), 1, 2, 2, 128, 128, 64, jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    want = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want), atol=3e-2, rtol=3e-2)
+
+
+def test_flash_block_shape_independence():
+    """Result must not depend on the tiling."""
+    q, k, v = _qkv(jax.random.key(3), 1, 2, 2, 256, 256, 64)
+    a = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    b = flash_attention(q, k, v, block_q=128, block_k=64, interpret=True)
+    c = flash_attention(q, k, v, block_q=64, block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-5)

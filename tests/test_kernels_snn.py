@@ -1,0 +1,103 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle.
+
+Sweeps shapes; integer kernels must be BIT-EXACT with ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lfsr
+from repro.kernels import ops, ref
+
+SHAPES = [(8, 1), (10, 25), (40, 25), (128, 32), (256, 130), (33, 7)]
+
+
+def _rand_words(rng, shape):
+    return jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+
+
+@pytest.mark.parametrize("n,w", SHAPES)
+def test_spike_process_bit_exact(n, w):
+    rng = np.random.default_rng(n * 100 + w)
+    spikes = _rand_words(rng, (w,))
+    weights = _rand_words(rng, (n, w))
+    got = ops.spike_process(spikes, weights, backend="interp")
+    want = ref.spike_process_ref(spikes, weights)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [8, 40, 100, 256])
+@pytest.mark.parametrize("threshold,leak", [(10, 1), (192, 16), (1, 0)])
+def test_lif_step_bit_exact(n, threshold, leak):
+    rng = np.random.default_rng(n)
+    v = jnp.asarray(rng.integers(0, 300, (n,), dtype=np.int32))
+    c = jnp.asarray(rng.integers(-50, 120, (n,), dtype=np.int32))
+    v2, f = ops.lif_step(v, c, threshold, leak, backend="interp")
+    rv, rf = ref.lif_step_ref(v, c, threshold, leak)
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(rf))
+
+
+@pytest.mark.parametrize("n,w", SHAPES)
+@pytest.mark.parametrize("wexp,ltp", [(128, 1023), (128, 16), (512, 64)])
+def test_stdp_update_bit_exact(n, w, wexp, ltp):
+    rng = np.random.default_rng(n * 7 + w)
+    weights = _rand_words(rng, (n, w))
+    pre = _rand_words(rng, (w,))
+    fired = jnp.asarray(rng.integers(0, 2, (n,)).astype(bool))
+    st = lfsr.seed(n + w, n * w).reshape(n, w)
+    n_syn = w * 32
+    got_w, got_s = ops.stdp_update(
+        weights, pre, fired, st, w_exp=wexp, gain=4, n_syn=n_syn,
+        ltp_prob=ltp, backend="interp")
+    want_w, want_s = ref.stdp_update_ref(
+        weights, pre, fired, st, wexp, 4, n_syn, ltp)
+    np.testing.assert_array_equal(np.asarray(got_w), np.asarray(want_w))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+
+
+@pytest.mark.parametrize("n,w", [(10, 25), (128, 32), (40, 25)])
+@pytest.mark.parametrize("train", [True, False])
+def test_fused_snn_step_bit_exact(n, w, train):
+    rng = np.random.default_rng(n + w)
+    weights = _rand_words(rng, (n, w))
+    pre = _rand_words(rng, (w,))
+    v = jnp.asarray(rng.integers(0, 200, (n,), dtype=np.int32))
+    teach = jnp.asarray(rng.integers(-100, 100, (n,), dtype=np.int32))
+    st = lfsr.seed(5, n * w).reshape(n, w)
+    kw = dict(threshold=192, leak=16, w_exp=128, gain=4, n_syn=w * 32,
+              ltp_prob=16)
+    got = ops.fused_snn_step(weights, pre, v, st, teach, train=train,
+                             backend="interp", **kw)
+    if train:
+        want = ref.fused_snn_step_ref(weights, pre, v, st, teach, **kw)
+    else:
+        counts = ref.spike_process_ref(pre, weights) + teach
+        v2, f = ref.lif_step_ref(v, counts, 192, 16)
+        want = (weights, v2, f, st)
+    for g, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_fused_equals_unfused_composition():
+    """The fused kernel must equal SPU -> NU -> SU composition exactly."""
+    rng = np.random.default_rng(0)
+    n, w = 40, 25
+    weights = _rand_words(rng, (n, w))
+    pre = _rand_words(rng, (w,))
+    v = jnp.zeros((n,), jnp.int32)
+    teach = jnp.zeros((n,), jnp.int32)
+    st = lfsr.seed(1, n * w).reshape(n, w)
+    kw = dict(w_exp=128, gain=4, n_syn=800, ltp_prob=1023)
+    counts = ops.spike_process(pre, weights, backend="interp")
+    v2, f = ops.lif_step(v, counts, 50, 4, backend="interp")
+    w2, s2 = ops.stdp_update(weights, pre, f, st, backend="interp", **kw)
+    fw, fv, ff, fs = ops.fused_snn_step(
+        weights, pre, v, st, teach, threshold=50, leak=4,
+        backend="interp", **kw)
+    np.testing.assert_array_equal(np.asarray(fw), np.asarray(w2))
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(ff), np.asarray(f))
+    np.testing.assert_array_equal(np.asarray(fs), np.asarray(s2))

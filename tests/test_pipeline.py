@@ -1,0 +1,44 @@
+"""Pipeline-parallel schedule == sequential stage application.
+
+Runs in a subprocess with 4 forced host devices (the main test process
+must keep the default single-device config)."""
+
+import subprocess
+import sys
+import textwrap
+
+
+def test_pipeline_matches_sequential():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.pipeline import pipelined_apply
+
+        S, M, B, D = 4, 6, 2, 16
+        mesh = jax.make_mesh((S,), ("stage",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        key = jax.random.key(0)
+        ws = jax.random.normal(key, (S, D, D)) * 0.3
+
+        def stage_fn(w, x):
+            return jnp.tanh(x @ w)
+
+        micro_x = jax.random.normal(jax.random.key(1), (M, B, D))
+
+        # sequential reference
+        ref = micro_x
+        for s in range(S):
+            ref = jax.vmap(lambda x: stage_fn(ws[s], x))(ref)
+
+        out = pipelined_apply(mesh, stage_fn, ws, micro_x,
+                              axis_name="stage")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+        print("PIPELINE_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], cwd="/root/repo",
+                       capture_output=True, text=True, timeout=300)
+    assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,142 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitpack, lfsr
+from repro.core.lif import lif_params, lif_step
+from repro.core.stdp import stdp_params, stdp_update
+from repro.core.energy import EnergyConstants, count_events, energy
+from repro.optim.compression import onebit_compress, onebit_decompress
+
+SET = settings(max_examples=30, deadline=None)
+
+
+@SET
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=200),
+       st.integers(0, 3))
+def test_pack_unpack_roundtrip_property(bits, rows):
+    arr = np.asarray(bits, np.int32)
+    if rows:
+        arr = np.tile(arr, (rows + 1, 1))
+    packed = bitpack.pack(jnp.asarray(arr))
+    out = np.asarray(bitpack.unpack(packed, arr.shape[-1]))
+    np.testing.assert_array_equal(out, arr)
+
+
+@SET
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=200))
+def test_popcount_equals_bit_sum(bits):
+    arr = np.asarray([bits], np.int32)
+    packed = bitpack.pack(jnp.asarray(arr))
+    got = int(bitpack.popcount(packed)[0])
+    assert got == arr.sum()
+
+
+@SET
+@given(st.integers(0, 0xFFFF), st.integers(1, 64))
+def test_lfsr_stays_nonzero_16bit(seed_val, steps):
+    s = lfsr.seed(seed_val, 8)
+    for _ in range(steps):
+        s = lfsr.step(s)
+        v = np.asarray(s)
+        assert (v != 0).all()
+        assert (v <= 0xFFFF).all()
+
+
+@SET
+@given(st.lists(st.integers(-200, 400), min_size=1, max_size=64),
+       st.lists(st.integers(-100, 300), min_size=1, max_size=64),
+       st.integers(1, 300), st.integers(0, 50))
+def test_lif_invariants(vs, counts, threshold, leak):
+    n = min(len(vs), len(counts))
+    v = jnp.asarray(np.maximum(np.asarray(vs[:n], np.int32), 0))
+    c = jnp.asarray(np.asarray(counts[:n], np.int32))
+    p = lif_params(threshold, leak)
+    v2, fired = lif_step(v, c, p)
+    v2n = np.asarray(v2)
+    fn = np.asarray(fired)
+    assert (v2n >= 0).all()                       # floor at 0
+    assert (v2n[fn] == 0).all()                   # reset on fire
+    assert (v2n <= np.maximum(np.asarray(v) + np.asarray(c), 0)).all()
+    # monotonicity: +1 input spike can only help firing
+    v3, fired3 = lif_step(v, c + 1, p)
+    assert (np.asarray(fired3) | ~fn).all()
+
+
+@SET
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1),
+       st.integers(1, 1023), st.integers(8, 512))
+def test_stdp_invariants(wbits, prebits, ltp_prob, wexp):
+    n, w = 4, 2
+    rng = np.random.default_rng(wbits & 0xFFFF)
+    weights = jnp.asarray(rng.integers(0, 2**32, (n, w), dtype=np.uint32))
+    pre = jnp.asarray(
+        np.array([prebits, wbits], np.uint32))
+    fired = jnp.asarray(np.array([True, False, True, True]))
+    state = lfsr.seed(prebits & 0xFFFF, n * w).reshape(n, w)
+    p = stdp_params(64, wexp, ltp_prob=ltp_prob)
+    w2, s2 = stdp_update(weights, pre, fired, state, p)
+    w0 = np.asarray(weights)
+    w2n = np.asarray(w2)
+    pren = np.asarray(pre)
+    # non-fired rows untouched
+    np.testing.assert_array_equal(w2n[1], w0[1])
+    # coincident synapses never cleared (LTD only strips non-coincident)
+    for i in (0, 2, 3):
+        coincident_before = w0[i] & pren
+        assert ((w2n[i] & coincident_before) == coincident_before).all()
+        # bits outside pre can only be cleared, never set
+        assert ((w2n[i] & ~pren) & ~w0[i]).sum() == 0
+
+
+@SET
+@given(st.floats(0.05, 1.0), st.integers(0, 10_000),
+       st.integers(16, 1024), st.integers(8, 64))
+def test_energy_fused_never_exceeds_decoupled(activity, post, n_in, n_n):
+    """Holds for input activity >= 5% (the paper's Poisson-MNIST regime
+    is 15-20%).  Below that, the event-driven accelerator's idle-cycle
+    skipping wins over the fused pipeline's per-cycle row streaming —
+    a real crossover hypothesis found at near-zero activity, now
+    documented here and in core/energy.py."""
+    k = EnergyConstants()
+    steps = 100
+    in_spikes = int(activity * steps * n_in)
+    ef = energy(count_events(n_n, n_in, steps, in_spikes, post, "fused"),
+                k, "fused")
+    ed = energy(count_events(n_n, n_in, steps, in_spikes, post,
+                             "decoupled"), k, "decoupled")
+    assert ef["total_J"] <= ed["total_J"]
+
+
+@SET
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=2,
+                max_size=100))
+def test_compression_identity(vals):
+    g = jnp.asarray(np.asarray(vals, np.float32))
+    err = jnp.zeros_like(g)
+    comp, new_err = onebit_compress(g, err)
+    out = onebit_decompress(comp, g.shape, g.size)
+    # exact algebraic identity: g + err_in = q + err_out
+    np.testing.assert_allclose(np.asarray(g), np.asarray(out)
+                               + np.asarray(new_err), atol=1e-4)
+
+
+@SET
+@given(st.integers(1, 6), st.integers(1, 4), st.integers(16, 64))
+def test_chunked_attention_matches_ref_property(nh, group_pow, t):
+    from repro.kernels.ref import attention_ref
+    from repro.models.layers.attention import chunked_attention
+    hkv = nh
+    hq = nh * min(group_pow, 2)
+    key = jax.random.key(t * 7 + nh)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (1, hq, t, 16))
+    k = jax.random.normal(k2, (1, hkv, t, 16))
+    v = jax.random.normal(k3, (1, hkv, t, 16))
+    got = chunked_attention(q, k, v, causal=True, chunk_k=16)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
