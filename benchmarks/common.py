@@ -13,6 +13,10 @@ from repro.data.digits import make_digits
 
 _CACHE: dict = {}
 
+# Every emit() call also lands here so run.py --json can serialize the
+# whole sweep (name -> us_per_call + parsed derived k=v metrics).
+RECORDS: list[dict] = []
+
 
 def digits_dataset(n_train=2000, n_test=1000, seed=1):
     """Preprocessed (deskew + soft-threshold) procedural digit split."""
@@ -42,3 +46,14 @@ def time_fn(fn, *args, reps=10, warmup=2):
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
+    rec: dict = {"name": name, "us_per_call": float(us_per_call)}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        v = v.rstrip("x")
+        try:
+            rec[k] = float(v)
+        except ValueError:
+            rec[k] = v
+    RECORDS.append(rec)

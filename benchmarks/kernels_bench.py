@@ -1,11 +1,17 @@
-"""RV-SNN granularity claim: fused SNNU step vs unfused SPU->NU->SU.
+"""RV-SNN granularity claim: fused SNNU step vs unfused SPU->NU->SU,
+and the time axis on top: the window kernel vs T per-step launches.
 
 The paper's coarse-grained instruction avoids pipeline stalls; the TPU
 analogue is HBM round-trips between kernel launches.  We report (a)
-interpret-mode wall time per step across population sizes (relative
-only — CPU emulation), and (b) the structural metric that transfers to
-TPU: HBM bytes accessed per step for the fused kernel vs the 3-kernel
-chain, from the trip-count-aware HLO analysis of the ref (XLA) paths.
+wall time per call across population sizes (relative only — CPU
+emulation of the ref/XLA paths, plus one small interpret-mode row that
+exercises the actual Pallas kernel body), and (b) the structural metric
+that transfers to TPU: analytic minimum HBM bytes per call.
+
+Two levels of fusion:
+  * fused step vs unfused SPU->NU->SU chain (one cycle, 3 launches);
+  * fused window vs T fused-step launches (the whole presentation
+    window, weights/LFSR resident in VMEM — weight traffic drops ~T×).
 """
 
 from __future__ import annotations
@@ -74,6 +80,61 @@ def run() -> dict:
              f"time_ratio={t_u/max(t_f,1e-9):.2f}x")
         out[(n, n_syn)] = {"bytes_ratio": b_u / b_f,
                            "time_ratio": t_u / max(t_f, 1e-9)}
+
+    # --- time axis: window kernel vs T per-step fused launches ----------
+    rng = np.random.default_rng(7)
+    for n, w, t_steps in ((256, 32, 72), (1024, 64, 32), (1024, 64, 128)):
+        n_syn = w * 32
+        weights, _, v, st, teach = _operands(n, w)
+        spk = jnp.asarray(
+            rng.integers(0, 2**32, (t_steps, w), dtype=np.uint32))
+
+        window = jax.jit(lambda *a: ops.fused_snn_window(
+            *a, n_syn=n_syn, **KW))
+
+        # the per-step path is T SEPARATE launches (one dispatch per
+        # cycle, state round-tripping host-visible buffers between
+        # them) — jitting a scan over the steps would fuse them into
+        # the very program the window op builds, measuring nothing
+        step = jax.jit(lambda *a: ops.fused_snn_step(
+            *a, n_syn=n_syn, **KW))
+
+        def step_chain(weights, spk, v, st, teach):
+            for t in range(spk.shape[0]):
+                weights, v, f, st = step(weights, spk[t], v, st, teach)
+            return weights, v, st
+
+        t_w = time_fn(window, weights, spk, v, st, teach, reps=5)
+        t_s = time_fn(step_chain, weights, spk, v, st, teach, reps=5)
+
+        # analytic minimum HBM traffic per window (bytes):
+        #   per-step: every launch round-trips weights + LFSR and reads
+        #             its spike row           -> T * (4*wb + sb)
+        #   window:   weights + LFSR cross HBM once, the T spike rows
+        #             stream in, the raster + v stream out
+        wb = n * w * 4
+        sb = w * 4
+        nb = n * 4
+        b_steps = t_steps * (4 * wb + sb)
+        b_win = 4 * wb + t_steps * sb + t_steps * n + 2 * nb
+        emit(f"kernels/window-{n}x{n_syn}xT{t_steps}", t_w,
+             f"min_hbm_bytes={b_win};bytes_ratio={b_steps/b_win:.2f}x;"
+             f"time_ratio={t_s/max(t_w,1e-9):.2f}x")
+        out[(n, n_syn, t_steps)] = {"bytes_ratio": b_steps / b_win,
+                                    "time_ratio": t_s / max(t_w, 1e-9)}
+
+    # one small interpret-mode row: the real Pallas window-kernel body
+    # (Python-interpreted, so absolute time is meaningless; it documents
+    # that the kernel itself runs and how it scales vs the oracle)
+    n, w, t_steps = 16, 4, 8
+    weights, _, v, st, teach = _operands(n, w, seed=3)
+    spk = jnp.asarray(rng.integers(0, 2**32, (t_steps, w), dtype=np.uint32))
+    t_i = time_fn(
+        lambda *a: ops.fused_snn_window(*a, n_syn=w * 32, backend="interp",
+                                        **KW),
+        weights, spk, v, st, teach, reps=3, warmup=1)
+    emit(f"kernels/window-interp-{n}x{w * 32}xT{t_steps}", t_i,
+         "backend=interp")
     return out
 
 

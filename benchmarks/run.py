@@ -7,18 +7,41 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
   wexp_sweep        §3.3     w_exp {128,256,512} dead-neuron sweep
   fig4_energy       Fig. 4   modeled power, fused vs decoupled
   table2_resources  Table 2  state-footprint analogue of LUT/FF/BRAM
-  kernels_bench     §2.2     fused SNNU vs unfused SPU/NU/SU chain
+  kernels_bench     §2.2     fused SNNU vs unfused chain, window vs steps
+
+Usage::
+
+  python benchmarks/run.py [module] [--json[=PATH]]
+
+``--json`` additionally writes every emitted row as machine-readable
+JSON (name -> us_per_call + parsed derived metrics such as bytes_ratio
+and time_ratio) so the perf trajectory is tracked across PRs.  PATH
+defaults to ``BENCH_kernels.json``; the ``=`` form keeps the module
+filter unambiguous (``run.py --json kernels_bench`` filters, it does
+not name the output file).
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 
-def main() -> None:
-    from benchmarks import (fig4_energy, fig5_neurons, kernels_bench,
-                            table1_accuracy, table2_resources, wexp_sweep)
+def main(argv: list[str] | None = None) -> None:
+    from benchmarks import (common, fig4_energy, fig5_neurons,
+                            kernels_bench, table1_accuracy,
+                            table2_resources, wexp_sweep)
+
+    args = list(sys.argv[1:] if argv is None else argv)
+    json_path = None
+    for a in list(args):
+        if a == "--json":
+            json_path = "BENCH_kernels.json"
+            args.remove(a)
+        elif a.startswith("--json="):
+            json_path = a.split("=", 1)[1] or "BENCH_kernels.json"
+            args.remove(a)
 
     mods = [("table1_accuracy", table1_accuracy),
             ("fig5_neurons", fig5_neurons),
@@ -26,7 +49,7 @@ def main() -> None:
             ("fig4_energy", fig4_energy),
             ("table2_resources", table2_resources),
             ("kernels_bench", kernels_bench)]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = args[0] if args else None
     print("name,us_per_call,derived")
     for name, mod in mods:
         if only and only != name:
@@ -34,6 +57,13 @@ def main() -> None:
         t0 = time.time()
         mod.run()
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+    if json_path is not None:
+        rows = {rec["name"]: {k: v for k, v in rec.items() if k != "name"}
+                for rec in common.RECORDS}
+        with open(json_path, "w") as fh:
+            json.dump(rows, fh, indent=2, sort_keys=True)
+        print(f"# wrote {len(rows)} rows to {json_path}", flush=True)
 
 
 if __name__ == "__main__":

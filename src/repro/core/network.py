@@ -1,8 +1,26 @@
-"""SNN network execution: lax.scan over time cycles (paper §3.1 network).
+"""SNN network execution over the presentation window (paper §3.1 network).
 
 The paper's network is a single fully-connected layer of LIF neurons fed
 by Poisson-encoded input spikes; training is online (weights change every
 cycle), inference counts output spikes over the presentation window.
+
+Two execution strategies:
+
+``cycle_backend="window"`` (default)
+    One ``ops.fused_snn_window`` launch covers the whole T-cycle window:
+    weights, membrane and LFSR state stay resident in VMEM while the
+    (tiny) per-cycle spike words stream past — the TPU analogue of the
+    paper's claim that the coarse-grained ``snn.step`` instruction keeps
+    the SPU→NU→SU dataflow in-pipeline.  Requires concrete (non-traced)
+    LIF/STDP parameters, since they lower as kernel literals.
+
+``cycle_backend="step"``
+    The original ``lax.scan`` of per-cycle ``snn_step`` calls.  Also the
+    automatic fallback when parameters arrive as tracers (e.g. a caller
+    jits this module with LIFParams as a runtime argument).
+
+``kernel_backend`` selects the kernel implementation for the window path
+("ref" = XLA scan oracle, "interp" = Pallas interpret, "tpu" = compiled).
 """
 
 from __future__ import annotations
@@ -15,6 +33,7 @@ import jax.numpy as jnp
 from repro.core.lif import LIFParams
 from repro.core.rvsnn import SnnRegFile, snn_regfile, snn_step
 from repro.core.stdp import STDPParams
+from repro.kernels import ops
 
 
 class SNNOutput(NamedTuple):
@@ -23,14 +42,63 @@ class SNNOutput(NamedTuple):
     fired: jnp.ndarray         # bool[T, n] raster
 
 
+def _check_backend(cycle_backend: str) -> None:
+    if cycle_backend not in ("window", "step"):
+        raise ValueError(
+            f"cycle_backend must be 'window' or 'step', got "
+            f"{cycle_backend!r}")
+
+
+def _static_int(x) -> int | None:
+    """Concretize a parameter to a Python int, or None if traced."""
+    try:
+        return int(x)
+    except (TypeError, jax.errors.ConcretizationTypeError):
+        return None
+
+
+def _window_params(lif: LIFParams, stdp: STDPParams | None):
+    """Static kernel literals for the window path, or None if traced."""
+    th, lk = _static_int(lif.threshold), _static_int(lif.leak)
+    if th is None or lk is None:
+        return None
+    if stdp is None:
+        # SU idle: the STDP literals are unused when train=False.
+        return dict(threshold=th, leak=lk, w_exp=0, gain=0, n_syn=1,
+                    ltp_prob=0, train=False)
+    su = tuple(_static_int(x) for x in
+               (stdp.w_exp, stdp.gain, stdp.n_syn, stdp.ltp_prob))
+    if any(x is None for x in su):
+        return None
+    return dict(threshold=th, leak=lk, w_exp=su[0], gain=su[1],
+                n_syn=su[2], ltp_prob=su[3], train=True)
+
+
 def run_sample(
     rf: SnnRegFile,
     spike_train: jnp.ndarray,   # uint32[T, w] packed input spikes
     lif: LIFParams,
     stdp: STDPParams | None = None,
     teach: jnp.ndarray | None = None,
+    *,
+    cycle_backend: str = "window",
+    kernel_backend: str = "ref",
 ) -> SNNOutput:
     """Present one sample for T cycles.  stdp=None -> inference."""
+    _check_backend(cycle_backend)
+    params = (_window_params(lif, stdp)
+              if cycle_backend == "window" else None)
+    if params is not None:
+        teach_arr = (jnp.zeros_like(rf.v) if teach is None
+                     else teach.astype(jnp.int32))
+        w2, v2, fired, lf2 = ops.fused_snn_window(
+            rf.weights, spike_train, rf.v, rf.lfsr, teach_arr,
+            backend=kernel_backend, **params)
+        rf_out = rf._replace(
+            weights=w2, v=v2, lfsr=lf2,
+            spike=spike_train[-1].astype(jnp.uint32))
+        counts = jnp.sum(fired.astype(jnp.int32), axis=0)
+        return SNNOutput(rf_out, counts, fired)
 
     def body(carry: SnnRegFile, words: jnp.ndarray):
         carry, fired = snn_step(carry, words, lif, stdp, teach)
@@ -54,12 +122,30 @@ def infer_batch(
     weights: jnp.ndarray,       # uint32[n, w]
     spike_trains: jnp.ndarray,  # uint32[B, T, w]
     lif: LIFParams,
+    *,
+    cycle_backend: str = "window",
+    kernel_backend: str = "ref",
 ) -> jnp.ndarray:
-    """Spike counts int32[B, n] for a batch (weights frozen, vmapped)."""
+    """Spike counts int32[B, n] for a batch (weights frozen).
+
+    The window path serves all B samples from ONE kernel launch with a
+    batch grid dimension (weights fetched once per neuron block, reused
+    across the batch) — the serving-throughput path.  The step path
+    vmaps B independent per-cycle scans.
+    """
+    _check_backend(cycle_backend)
+    params = (_window_params(lif, None)
+              if cycle_backend == "window" else None)
+    if params is not None:
+        return ops.infer_window_batch(weights, spike_trains,
+                                      threshold=params["threshold"],
+                                      leak=params["leak"],
+                                      backend=kernel_backend)
     rf0 = snn_regfile(weights)
 
     def one(train):
-        return run_sample(reset_between_samples(rf0), train, lif).spike_counts
+        return run_sample(reset_between_samples(rf0), train, lif,
+                          cycle_backend="step").spike_counts
 
     return jax.vmap(one)(spike_trains)
 
@@ -70,6 +156,9 @@ def train_stream(
     teach: jnp.ndarray,         # int32[N, n] per-sample teacher currents
     lif: LIFParams,
     stdp: STDPParams,
+    *,
+    cycle_backend: str = "window",
+    kernel_backend: str = "ref",
 ) -> tuple[SnnRegFile, jnp.ndarray]:
     """Online STDP over a stream of samples (sequential, as in hardware).
 
@@ -79,7 +168,9 @@ def train_stream(
     def body(carry: SnnRegFile, inp):
         train, tch = inp
         carry = reset_between_samples(carry)
-        out = run_sample(carry, train, lif, stdp, tch)
+        out = run_sample(carry, train, lif, stdp, tch,
+                         cycle_backend=cycle_backend,
+                         kernel_backend=kernel_backend)
         return out.regfile, out.spike_counts
 
     return jax.lax.scan(body, rf, (spike_trains, teach))

@@ -12,6 +12,7 @@ the class of the maximally-firing neuron across all blocks.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
 import jax
@@ -43,6 +44,8 @@ class SNNTrainConfig:
     teach_neg: int = -1024       # inhibition into the others
     epochs: int = 2
     seed: int = 0x22A
+    cycle_backend: str = "window"   # "window" (time-resident) | "step"
+    kernel_backend: str = "ref"     # "ref" | "interp" | "tpu"
 
     @property
     def n_blocks(self) -> int:
@@ -82,15 +85,23 @@ def _train_block(cfg: SNNTrainConfig, key: jax.Array,
     w0 = init_weights(cfg.n_classes, cfg.words, dense=True)
     rf = snn_regfile(w0, seed=cfg.seed + 17 * block_idx)
     teach = _teacher(labels, cfg)
-    step = jax.jit(network.train_stream, static_argnums=())
+    # LIF/STDP params are closed over (not jit arguments) so they stay
+    # concrete at trace time and lower as window-kernel literals.
+    step = jax.jit(functools.partial(
+        network.train_stream, lif=cfg.lif(), stdp=cfg.stdp(block_idx),
+        cycle_backend=cfg.cycle_backend,
+        kernel_backend=cfg.kernel_backend))
     for _ in range(cfg.epochs):
-        rf, _ = step(rf, spike_trains, teach, cfg.lif(), cfg.stdp(block_idx))
+        rf, _ = step(rf, spike_trains, teach)
     return rf.weights
 
 
 def classify(model: SNNModel, spike_trains: jnp.ndarray) -> jnp.ndarray:
     """Predicted class int32[B]: class of the maximally-firing neuron."""
-    counts = network.infer_batch(model.weights, spike_trains, model.cfg.lif())
+    counts = network.infer_batch(
+        model.weights, spike_trains, model.cfg.lif(),
+        cycle_backend=model.cfg.cycle_backend,
+        kernel_backend=model.cfg.kernel_backend)
     best = jnp.argmax(counts, axis=-1)
     return model.neuron_class[best]
 

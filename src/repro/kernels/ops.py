@@ -8,9 +8,13 @@ neuron axis -> multiple of the block size) and backend dispatch:
                     executed in Python — correctness validation)
   backend="tpu"     compiled pl.pallas_call (the deployment target)
 
-The SNN training loop (repro.core.network) uses the ref path by default
-because it is scanned over time on CPU here; on a real TPU deployment the
-fused kernel replaces the per-cycle body 1:1 (same signature).
+The SNN training loop (repro.core.network) calls the *window* ops
+(``fused_snn_window`` / ``infer_window_batch``): one launch covers the
+whole T-cycle presentation window with weights/LFSR resident in VMEM,
+instead of T per-cycle launches that round-trip state through HBM.  The
+ref path of those ops is the same scan-of-steps XLA program the old
+per-cycle path produced, so CPU behavior is unchanged; on TPU the
+``backend="tpu"`` window kernel is the deployment target.
 """
 
 from __future__ import annotations
@@ -38,6 +42,15 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, fill=0) -> jnp.ndarray:
 
 def _block_n(n_padded: int) -> int:
     return min(128, n_padded)
+
+
+def _pad_state(x: jnp.ndarray, bn: int, fill=0) -> jnp.ndarray:
+    """Pad an [n, w] state matrix to lane/block alignment.
+
+    LFSR states must use fill=1: padded lanes have to be nonzero (0 is
+    the PRNG's absorbing state); the value itself is never read back.
+    """
+    return _pad_to(_pad_to(x, 1, _LANES, fill=fill), 0, bn, fill=fill)
 
 
 def _prep(weights, pre, block_w_mult=_LANES):
@@ -85,9 +98,7 @@ def stdp_update(weights, pre_spikes, post_fired, lfsr_state, *,
     n, w = weights.shape
     wp, pp, bn = _prep(weights, pre_spikes)
     fp = _pad_to(post_fired, 0, max(bn, 8))
-    # padded LFSR lanes must be nonzero (absorbing state), value is unused
-    sp = _pad_to(_pad_to(lfsr_state, 1, _LANES, fill=1), 0, max(bn, 8),
-                 fill=1)
+    sp = _pad_state(lfsr_state, max(bn, 8), fill=1)
     w2, s2 = _k.stdp_update(wp, pp, fp, sp, w_exp=w_exp, gain=gain,
                             n_syn=n_syn, ltp_prob=ltp_prob,
                             block_n=max(bn, 8),
@@ -106,15 +117,67 @@ def fused_snn_step(weights, pre_spikes, v, lfsr_state, teach, *,
     if backend == "ref":
         return _ref.fused_snn_step_ref(
             weights, pre_spikes, v, lfsr_state, teach, threshold, leak,
-            w_exp, gain, n_syn, ltp_prob)
+            w_exp, gain, n_syn, ltp_prob, train)
     n, w = weights.shape
     wp, pp, bn = _prep(weights, pre_spikes)
     bn = max(bn, 8)
     vp = _pad_to(v, 0, bn)
     tp = _pad_to(teach, 0, bn)
-    sp = _pad_to(_pad_to(lfsr_state, 1, _LANES, fill=1), 0, bn, fill=1)
+    sp = _pad_state(lfsr_state, bn, fill=1)
     w2, v2, f, s2 = _k.fused_snn_step(
         wp, pp, vp, sp, tp, threshold=threshold, leak=leak, w_exp=w_exp,
         gain=gain, n_syn=n_syn, ltp_prob=ltp_prob, train=train,
         block_n=bn, interpret=(backend == "interp"))
     return w2[:n, :w], v2[:n], f[:n], s2[:n, :w]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "threshold", "leak", "w_exp", "gain", "n_syn", "ltp_prob", "train",
+    "backend"))
+def fused_snn_window(weights, spike_train, v, lfsr_state, teach, *,
+                     threshold: int, leak: int, w_exp: int, gain: int,
+                     n_syn: int, ltp_prob: int = 1023, train: bool = True,
+                     backend: str = "ref"):
+    """T ``snn.step`` cycles with weights/v/LFSR resident in VMEM.
+
+    spike_train: uint32[T, w].  Bit-exact with T sequential
+    :func:`fused_snn_step` calls (including the LFSR sequence).
+    Returns (weights', v', fired bool[T, n], lfsr').
+    """
+    if backend == "ref":
+        return _ref.fused_snn_window_ref(
+            weights, spike_train, v, lfsr_state, teach, threshold, leak,
+            w_exp, gain, n_syn, ltp_prob, train)
+    n, w = weights.shape
+    bn = max(_block_n(max(8, n)), 8)
+    wp = _pad_state(weights, bn)
+    stp = _pad_to(spike_train, 1, _LANES)
+    vp = _pad_to(v, 0, bn)
+    tp = _pad_to(teach, 0, bn)
+    sp = _pad_state(lfsr_state, bn, fill=1)
+    w2, v2, f, s2 = _k.fused_snn_window(
+        wp, stp, vp, sp, tp, threshold=threshold, leak=leak, w_exp=w_exp,
+        gain=gain, n_syn=n_syn, ltp_prob=ltp_prob, train=train,
+        block_n=bn, interpret=(backend == "interp"))
+    return w2[:n, :w], v2[:n], f[:, :n], s2[:n, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "leak", "backend"))
+def infer_window_batch(weights, spike_trains, *, threshold: int, leak: int,
+                       backend: str = "ref"):
+    """Serving path: spike counts int32[B, n] for B windows per launch.
+
+    spike_trains: uint32[B, T, w]; weights frozen, membrane reset per
+    sample (``reset_between_samples`` semantics).
+    """
+    if backend == "ref":
+        return _ref.infer_window_batch_ref(weights, spike_trains,
+                                           threshold, leak)
+    n, _ = weights.shape
+    bn = max(_block_n(max(8, n)), 8)
+    wp = _pad_state(weights, bn)
+    stp = _pad_to(spike_trains, 2, _LANES)
+    counts = _k.infer_window_batch(
+        wp, stp, threshold=threshold, leak=leak, block_n=bn,
+        interpret=(backend == "interp"))
+    return counts[:, :n]

@@ -41,18 +41,60 @@ def stdp_update_ref(weights, pre_spikes, post_fired, lfsr_state,
 
 def fused_snn_step_ref(weights, pre_spikes, v, lfsr_state, teach,
                        threshold: int, leak: int, w_exp: int, gain: int,
-                       n_syn: int, ltp_prob: int):
+                       n_syn: int, ltp_prob: int, train: bool = True):
     """SNNU: one fused spike->neuron->synapse cycle.
 
-    Returns (weights', v', fired, lfsr').  ``teach`` may be None.
+    Returns (weights', v', fired, lfsr').  ``teach`` may be None;
+    ``train=False`` leaves the SU idle (weights/LFSR pass through).
     """
     counts = spike_process_ref(pre_spikes, weights)
     if teach is not None:
         counts = counts + teach
     v2, fired = lif_step_ref(v, counts, threshold, leak)
+    if not train:
+        return weights, v2, fired, lfsr_state
     w2, lf2 = stdp_update_ref(weights, pre_spikes, fired, lfsr_state,
                               w_exp, gain, n_syn, ltp_prob)
     return w2, v2, fired, lf2
+
+
+def fused_snn_window_ref(weights, spike_train, v, lfsr_state, teach,
+                         threshold: int, leak: int, w_exp: int, gain: int,
+                         n_syn: int, ltp_prob: int, train: bool = True):
+    """T sequential fused SNNU cycles (the window kernel's ground truth).
+
+    spike_train: uint32[T, w].  Returns (weights', v', fired bool[T, n],
+    lfsr') — bit-exact (incl. the LFSR sequence) with T sequential
+    :func:`fused_snn_step_ref` calls.
+    """
+
+    def body(carry, pre):
+        w, vv, st = carry
+        w2, v2, fired, st2 = fused_snn_step_ref(
+            w, pre, vv, st, teach, threshold, leak, w_exp, gain,
+            n_syn, ltp_prob, train)
+        return (w2, v2, st2), fired
+
+    (w2, v2, st2), fired = jax.lax.scan(
+        body, (weights, v, lfsr_state), spike_train)
+    return w2, v2, fired, st2
+
+
+def infer_window_batch_ref(weights, spike_trains, threshold: int,
+                           leak: int):
+    """Serving oracle: spike counts int32[B, n], weights frozen, v reset."""
+    n = weights.shape[0]
+
+    def one(train):
+        def body(vv, pre):
+            counts = spike_process_ref(pre, weights)
+            v2, fired = lif_step_ref(vv, counts, threshold, leak)
+            return v2, fired
+
+        _, fired = jax.lax.scan(body, jnp.zeros((n,), jnp.int32), train)
+        return jnp.sum(fired.astype(jnp.int32), axis=0)
+
+    return jax.vmap(one)(spike_trains)
 
 
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

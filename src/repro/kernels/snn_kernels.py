@@ -8,14 +8,29 @@ here preserves (AND/popcount ignore zero words; STDP's LTP or-in of a
 zero pre-word is a no-op and LTD can only clear).  The neuron axis is
 blocked by ``BN`` (multiple of 8, the sublane width).
 
-VMEM budget (per grid step, BN=128, padded words W<=2048):
-  fused step: weights + lfsr + outputs ~ 4 * BN * W * 4B = 4 MiB at the
-  64k-synapse extreme, comfortably under the ~16 MiB v5e VMEM.
+Time axis (window kernels): **state is VMEM-resident, time is
+streamed**.  ``fused_snn_window`` loads the weight block, LFSR block and
+membrane block once, then a ``fori_loop`` over the T presentation cycles
+reads one (small) packed spike row per cycle and stores one fired row
+into the raster — weights/LFSR cross HBM once per *window*, not once per
+*cycle*.  The batch-inference kernel orders the grid (neuron-block
+major, batch minor) so a weight block stays resident across all B
+samples of a serving batch.
 
-The fused kernel is the TPU microarchitecture of the paper's
+VMEM budget (per grid step, BN=128, padded words W<=2048, T<=256):
+  fused step:   in + out blocks of weights and LFSR
+                ~ 4 * BN * W * 4B = 4 MiB at the 64k-synapse extreme.
+  fused window: the same 4 MiB of state blocks, plus the streamed
+                spike window T * W * 4B (2 MiB at T=256, W=2048) and
+                the bool raster T * BN (32 KiB) — ~6 MiB worst case,
+                comfortably under the ~16 MiB v5e VMEM.
+
+The fused kernels are the TPU microarchitecture of the paper's
 coarse-granularity ``snn.step`` instruction: one pass through VMEM does
 spike-process + LIF + STDP, where the unfused path round-trips HBM
-between the three stages (benchmarked in benchmarks/kernels_bench.py).
+between the three stages — and the window kernel extends the same
+argument across the time axis (benchmarks/kernels_bench.py measures
+both levels of fusion).
 """
 
 from __future__ import annotations
@@ -223,3 +238,162 @@ def fused_snn_step(weights, pre_spikes, v, lfsr_state, teach, *,
                    pl.BlockSpec((block_n, w), lambda i: (i, 0))),
         interpret=interpret,
     )(weights, pre_spikes[None, :], v, lfsr_state, teach)
+
+
+# --- time-resident fused window (T cycles per launch) -------------------------
+
+def _fused_window_kernel(threshold, leak, w_exp, gain, n_syn, ltp_prob,
+                         train,
+                         w_ref, s_ref, v_ref, st_ref, t_ref,
+                         wo_ref, vo_ref, f_ref, sto_ref):
+    n_steps = s_ref.shape[0]
+    teach = t_ref[...]
+
+    def cycle(t, carry):
+        w, v, st = carry
+        pre = pl.load(s_ref, (pl.dslice(t, 1), slice(None)))   # (1, W)
+        counts = _popcount_rows(jnp.bitwise_and(pre, w)) + teach
+        v_int = v + counts
+        fired = v_int >= threshold
+        v_out = jnp.where(
+            fired, jnp.int32(0), jnp.maximum(v_int - leak, jnp.int32(0)))
+        pl.store(f_ref, (pl.dslice(t, 1), slice(None)), fired[None, :])
+        if train:
+            w, st = _stdp_body(w, pre, fired, st, w_exp=w_exp, gain=gain,
+                               n_syn=n_syn, ltp_prob=ltp_prob)
+        return w, v_out, st
+
+    w, v, st = jax.lax.fori_loop(
+        0, n_steps, cycle, (w_ref[...], v_ref[...], st_ref[...]))
+    wo_ref[...] = w
+    vo_ref[...] = v
+    sto_ref[...] = st
+
+
+def _window_infer_kernel(threshold, leak,
+                         w_ref, s_ref, v_ref, t_ref, vo_ref, f_ref):
+    n_steps = s_ref.shape[0]
+    w = w_ref[...]
+    teach = t_ref[...]
+
+    def cycle(t, v):
+        pre = pl.load(s_ref, (pl.dslice(t, 1), slice(None)))   # (1, W)
+        v_int = v + _popcount_rows(jnp.bitwise_and(pre, w)) + teach
+        fired = v_int >= threshold
+        pl.store(f_ref, (pl.dslice(t, 1), slice(None)), fired[None, :])
+        return jnp.where(
+            fired, jnp.int32(0), jnp.maximum(v_int - leak, jnp.int32(0)))
+
+    vo_ref[...] = jax.lax.fori_loop(0, n_steps, cycle, v_ref[...])
+
+
+def fused_snn_window(weights, spike_train, v, lfsr_state, teach, *,
+                     threshold: int, leak: int, w_exp: int, gain: int,
+                     n_syn: int, ltp_prob: int, train: bool = True,
+                     block_n=128, interpret=False):
+    """T fused SNNU cycles with VMEM-resident state.
+
+    spike_train: uint32[T, w] — the whole presentation window, streamed
+    one row per inner-loop cycle while weights/v/LFSR stay resident.
+    Per cycle this is bit-exact with :func:`fused_snn_step` (the LFSR
+    advances through the identical sequence).
+
+    ``train=False`` (SU idle) dispatches to a read-only variant whose
+    launch declares no weight/LFSR outputs — those arrays cross HBM
+    once inbound and the originals are passed through — so the
+    inference window pays none of the state write-back traffic.
+
+    Returns (weights', v', fired bool[T, n], lfsr').
+    """
+    n, w = weights.shape
+    t_steps = spike_train.shape[0]
+    if not train:
+        v2, fired = pl.pallas_call(
+            functools.partial(_window_infer_kernel, int(threshold),
+                              int(leak)),
+            out_shape=(jax.ShapeDtypeStruct((n,), jnp.int32),
+                       jax.ShapeDtypeStruct((t_steps, n), jnp.bool_)),
+            grid=(n // block_n,),
+            in_specs=[
+                pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+                pl.BlockSpec((t_steps, w), lambda i: (0, 0)),
+                pl.BlockSpec((block_n,), lambda i: (i,)),
+                pl.BlockSpec((block_n,), lambda i: (i,)),
+            ],
+            out_specs=(pl.BlockSpec((block_n,), lambda i: (i,)),
+                       pl.BlockSpec((t_steps, block_n), lambda i: (0, i))),
+            interpret=interpret,
+        )(weights, spike_train, v, teach)
+        return weights, v2, fired, lfsr_state
+    kern = functools.partial(_fused_window_kernel, int(threshold),
+                             int(leak), w_exp, gain, n_syn, ltp_prob,
+                             train)
+    return pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((n, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((t_steps, n), jnp.bool_),
+                   jax.ShapeDtypeStruct((n, w), jnp.uint32)),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+            pl.BlockSpec((t_steps, w), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=(pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+                   pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((t_steps, block_n), lambda i: (0, i)),
+                   pl.BlockSpec((block_n, w), lambda i: (i, 0))),
+        interpret=interpret,
+    )(weights, spike_train, v, lfsr_state, teach)
+
+
+# --- batched inference window (serving path) ----------------------------------
+
+def _infer_window_kernel(threshold, leak, w_ref, s_ref, o_ref):
+    n_steps = s_ref.shape[1]
+    w = w_ref[...]
+    zero = jnp.zeros((w_ref.shape[0],), jnp.int32)
+
+    def cycle(t, carry):
+        v, acc = carry
+        pre = pl.load(s_ref, (pl.dslice(0, 1), pl.dslice(t, 1),
+                              slice(None)))[0]        # (1, W)
+        v_int = v + _popcount_rows(jnp.bitwise_and(pre, w))
+        fired = v_int >= threshold
+        v_out = jnp.where(
+            fired, jnp.int32(0), jnp.maximum(v_int - leak, jnp.int32(0)))
+        return v_out, acc + fired.astype(jnp.int32)
+
+    _, acc = jax.lax.fori_loop(0, n_steps, cycle, (zero, zero))
+    o_ref[...] = acc[None, :]
+
+
+def infer_window_batch(weights, spike_trains, *, threshold: int,
+                       leak: int, block_n=128, interpret=False):
+    """Serving kernel: B frozen-weight windows per launch.
+
+    spike_trains: uint32[B, T, w].  Grid is (neuron blocks, batch) with
+    batch minor, so each weight block is fetched once and reused for all
+    B samples.  Membrane state starts from reset (v=0), matching
+    ``reset_between_samples`` semantics.
+
+    Returns spike counts int32[B, n] over the window.
+    """
+    n, w = weights.shape
+    b, t_steps, _ = spike_trains.shape
+    kern = functools.partial(_infer_window_kernel, int(threshold),
+                             int(leak))
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        grid=(n // block_n, b),
+        in_specs=[
+            pl.BlockSpec((block_n, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, t_steps, w), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i, j: (j, i)),
+        interpret=interpret,
+    )(weights, spike_trains)

@@ -109,6 +109,47 @@ def test_end_to_end_learning_beats_chance():
     assert acc > 0.35  # chance is 0.10
 
 
+def test_window_and_step_paths_bit_exact():
+    """cycle_backend="window" == the per-cycle scan, full regfile."""
+    n, words, T, B = 12, 3, 20, 4
+    w0 = init_weights(n, words, dense=False)
+    lif = lif_params(40, 3)
+    stdp = stdp_params(words * 32, w_exp=30, gain=4, ltp_prob=500)
+    key = jax.random.key(31)
+    trains = poisson_encode_batch(
+        key, jax.random.uniform(key, (B, words * 32)), T)
+    teach = jnp.asarray(
+        np.random.default_rng(2).integers(-50, 50, (B, n), dtype=np.int32))
+    rf = snn_regfile(w0)
+    rf_w, c_w = network.train_stream(rf, trains, teach, lif, stdp,
+                                     cycle_backend="window")
+    rf_s, c_s = network.train_stream(rf, trains, teach, lif, stdp,
+                                     cycle_backend="step")
+    for a, b in [(rf_w.weights, rf_s.weights), (rf_w.v, rf_s.v),
+                 (rf_w.lfsr, rf_s.lfsr), (rf_w.spike, rf_s.spike),
+                 (c_w, c_s)]:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    i_w = network.infer_batch(rf_w.weights, trains, lif,
+                              cycle_backend="window")
+    i_s = network.infer_batch(rf_w.weights, trains, lif,
+                              cycle_backend="step")
+    np.testing.assert_array_equal(np.asarray(i_w), np.asarray(i_s))
+
+
+def test_window_path_falls_back_under_traced_params():
+    """jit with LIFParams as runtime args must still work (step path)."""
+    n, words, T = 8, 2, 10
+    w0 = init_weights(n, words, dense=True)
+    lif = lif_params(16, 1)
+    trains = poisson_encode_batch(
+        jax.random.key(3), jax.random.uniform(jax.random.key(4),
+                                              (2, words * 32)), T)
+    jitted = jax.jit(network.infer_batch)
+    got = jitted(w0, trains, lif)
+    want = network.infer_batch(w0, trains, lif)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_reset_between_samples_clears_state():
     w = init_weights(3, 2)
     rf = snn_regfile(w)

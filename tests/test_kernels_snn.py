@@ -81,6 +81,90 @@ def test_fused_snn_step_bit_exact(n, w, train):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
 
 
+def _window_operands(n, w, t_steps, seed=0):
+    rng = np.random.default_rng(seed)
+    weights = _rand_words(rng, (n, w))
+    spk = _rand_words(rng, (t_steps, w))
+    v = jnp.asarray(rng.integers(0, 200, (n,), dtype=np.int32))
+    teach = jnp.asarray(rng.integers(-100, 100, (n,), dtype=np.int32))
+    st = lfsr.seed(n + w + t_steps, n * w).reshape(n, w)
+    return weights, spk, v, teach, st
+
+
+@pytest.mark.parametrize("n,w", [(8, 1), (10, 25), (33, 7), (128, 32)])
+@pytest.mark.parametrize("train", [True, False])
+def test_fused_window_equals_sequential_steps(n, w, train):
+    """Window kernel == T sequential fused steps, bit-exact incl. LFSR."""
+    t_steps = 9
+    weights, spk, v, teach, st = _window_operands(n, w, t_steps)
+    kw = dict(threshold=60, leak=4, w_exp=64, gain=4, n_syn=w * 32,
+              ltp_prob=200)
+    got = ops.fused_snn_window(weights, spk, v, st, teach, train=train,
+                               backend="interp", **kw)
+    wq, vq, sq = weights, v, st
+    raster = []
+    for t in range(t_steps):
+        wq, vq, f, sq = ops.fused_snn_step(
+            wq, spk[t], vq, sq, teach, train=train, backend="ref", **kw)
+        raster.append(np.asarray(f))
+    want = (wq, vq, np.stack(raster), sq)
+    for g, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_fused_window_zero_teach_matches_no_teach_ref():
+    """teach=0 through the kernel == teach-free sequential reference."""
+    n, w, t_steps = 10, 3, 7
+    weights, spk, v, _, st = _window_operands(n, w, t_steps, seed=2)
+    kw = dict(threshold=30, leak=2, w_exp=32, gain=4, n_syn=w * 32,
+              ltp_prob=1023)
+    got = ops.fused_snn_window(weights, spk, v, st,
+                               jnp.zeros((n,), jnp.int32),
+                               backend="interp", **kw)
+    want = ref.fused_snn_window_ref(weights, spk, v, st, None,
+                                    kw["threshold"], kw["leak"],
+                                    kw["w_exp"], kw["gain"], kw["n_syn"],
+                                    kw["ltp_prob"])
+    for g, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_fused_window_ref_matches_interp():
+    """ops dispatch: ref and interp backends agree on the window op."""
+    n, w, t_steps = 40, 25, 12
+    weights, spk, v, teach, st = _window_operands(n, w, t_steps, seed=4)
+    kw = dict(threshold=50, leak=4, w_exp=128, gain=4, n_syn=w * 32,
+              ltp_prob=16)
+    a = ops.fused_snn_window(weights, spk, v, st, teach,
+                             backend="ref", **kw)
+    b = ops.fused_snn_window(weights, spk, v, st, teach,
+                             backend="interp", **kw)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("n,w,b", [(8, 1, 2), (33, 7, 3), (128, 32, 4)])
+def test_infer_window_batch_bit_exact(n, w, b):
+    """Batched serving kernel == per-sample inference oracle."""
+    rng = np.random.default_rng(n * 3 + w + b)
+    weights = _rand_words(rng, (n, w))
+    trains = _rand_words(rng, (b, 11, w))
+    got = ops.infer_window_batch(weights, trains, threshold=40, leak=3,
+                                 backend="interp")
+    want = ref.infer_window_batch_ref(weights, trains, 40, 3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and each batch row == the single-sample window op (inference mode)
+    for i in range(b):
+        _, _, fired, _ = ops.fused_snn_window(
+            weights, trains[i], jnp.zeros((n,), jnp.int32),
+            jnp.ones((n, w), jnp.uint32), jnp.zeros((n,), jnp.int32),
+            threshold=40, leak=3, w_exp=0, gain=0, n_syn=1, ltp_prob=0,
+            train=False, backend="interp")
+        np.testing.assert_array_equal(
+            np.asarray(got[i]),
+            np.asarray(jnp.sum(fired.astype(jnp.int32), axis=0)))
+
+
 def test_fused_equals_unfused_composition():
     """The fused kernel must equal SPU -> NU -> SU composition exactly."""
     rng = np.random.default_rng(0)
