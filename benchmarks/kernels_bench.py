@@ -8,17 +8,31 @@ emulation of the ref/XLA paths, plus one small interpret-mode row that
 exercises the actual Pallas kernel body), and (b) the structural metric
 that transfers to TPU: analytic minimum HBM bytes per call.
 
-Two levels of fusion:
+Four levels of scale-out, each vs its sequential baseline:
   * fused step vs unfused SPU->NU->SU chain (one cycle, 3 launches);
   * fused window vs T fused-step launches (the whole presentation
-    window, weights/LFSR resident in VMEM — weight traffic drops ~T×).
+    window, weights/LFSR resident in VMEM — weight traffic drops ~T×);
+  * batched training grid vs B sequential window launches (one launch
+    trains B independent streams);
+  * neuron-sharded window ops vs single-core (per-device weight
+    traffic drops D× on a D-device mesh; run.py forces an 8-device
+    host mesh so the shard_map path really executes here).
+Plus chunked spike streaming: the VMEM spike slab shrinks T/T_chunk×
+while staying bit-exact, which is what lets T grow unbounded.
 """
 
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_REPO = Path(__file__).resolve().parents[1]
 
 from benchmarks.common import emit, time_fn
 from repro.core import lfsr
@@ -123,17 +137,107 @@ def run() -> dict:
         out[(n, n_syn, t_steps)] = {"bytes_ratio": b_steps / b_win,
                                     "time_ratio": t_s / max(t_w, 1e-9)}
 
+    # --- batch axis: batched training grid vs B sequential windows ------
+    for n, w, t_steps, b in ((16, 25, 72, 8), (128, 32, 32, 8)):
+        n_syn = w * 32
+        rngb = np.random.default_rng(11)
+        wts = jnp.asarray(
+            rngb.integers(0, 2**32, (b, n, w), dtype=np.uint32))
+        spk = jnp.asarray(
+            rngb.integers(0, 2**32, (b, t_steps, w), dtype=np.uint32))
+        v = jnp.zeros((b, n), jnp.int32)
+        teach = jnp.zeros((b, n), jnp.int32)
+        st = jnp.stack([lfsr.seed(1 + i, n * w).reshape(n, w)
+                        for i in range(b)])
+
+        batched = jax.jit(lambda *a: ops.train_window_batch(
+            *a, n_syn=n_syn, **KW))
+        window = jax.jit(lambda *a: ops.fused_snn_window(
+            *a, n_syn=n_syn, **KW))
+
+        # the sequential baseline is B SEPARATE window launches — one
+        # per training stream, exactly what the pre-batch trainer did
+        # per active-learning block / epoch replica
+        def seq_chain(wts, spk, v, st, teach):
+            outs = []
+            for i in range(b):
+                outs.append(window(wts[i], spk[i], v[i], st[i],
+                                   teach[i]))
+            return outs
+
+        t_b = time_fn(batched, wts, spk, v, st, teach, reps=5)
+        t_q = time_fn(seq_chain, wts, spk, v, st, teach, reps=5)
+        emit(f"kernels/train-batch-{n}x{n_syn}xT{t_steps}xB{b}", t_b,
+             f"launches=1_vs_{b};"
+             f"time_ratio={t_q/max(t_b,1e-9):.2f}x")
+        out[("train_batch", n, n_syn, t_steps, b)] = {
+            "time_ratio": t_q / max(t_b, 1e-9)}
+
+    # --- neuron axis: sharded window ops vs single-core -----------------
+    # Runs in a subprocess: the forced multi-device CPU mesh would split
+    # this process's thread pool and skew every other wall-clock row.
+    ndev = 8
+    n, w, t_steps, b = 1024, 64, 32, 8
+    n_syn = w * 32
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={ndev}"
+                        ).strip()
+    env["PYTHONPATH"] = (str(_REPO / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.distributed.snn_mesh",
+             "--bench", "--devices", str(ndev), "--neurons", str(n),
+             "--words", str(w), "--steps", str(t_steps),
+             "--batch", str(b)],
+            env=env, capture_output=True, text=True, timeout=600)
+    except subprocess.TimeoutExpired as e:
+        proc = subprocess.CompletedProcess(e.cmd, -1, stdout="",
+                                           stderr="timeout after 600s")
+    row = next((ln for ln in proc.stdout.splitlines()
+                if ln.startswith("BENCH ")), None)
+    if proc.returncode == 0 and row is not None:
+        kv = dict(p.split("=", 1) for p in row.split()[1:])
+        t_1, t_d = float(kv["t_single_us"]), float(kv["t_shard_us"])
+        # analytic per-device weight traffic: each device reads only its
+        # n/D rows once per launch — the capacity metric that lets
+        # populations scale past one core's VMEM
+        wb = n * w * 4
+        emit(f"kernels/window-shard-{n}x{n_syn}xD{ndev}", t_d,
+             f"per_device_weight_bytes={wb // ndev};"
+             f"bytes_ratio={ndev:.2f}x;"
+             f"time_ratio={t_1/max(t_d,1e-9):.2f}x")
+        out[("shard", n, n_syn, ndev)] = {
+            "bytes_ratio": float(ndev),
+            "time_ratio": t_1 / max(t_d, 1e-9)}
+    else:
+        print(f"# window-shard row skipped "
+              f"(rc={proc.returncode}): {proc.stderr.strip()[:200]}")
+
+    # --- chunked spike streaming: bounded VMEM at unbounded T -----------
+    # (analytic: the streamed slab is the only T-dependent VMEM term)
+    for n, w, t_steps, tc in ((1024, 64, 2048, 64),):
+        slab_full = t_steps * w * 4
+        slab_chunk = tc * w * 4
+        emit(f"kernels/window-chunk-{n}x{w * 32}xT{t_steps}c{tc}", 0.0,
+             f"vmem_spike_bytes={slab_chunk};"
+             f"vmem_ratio={slab_full/slab_chunk:.2f}x")
+        out[("chunk", n, t_steps, tc)] = {
+            "vmem_ratio": slab_full / slab_chunk}
+
     # one small interpret-mode row: the real Pallas window-kernel body
     # (Python-interpreted, so absolute time is meaningless; it documents
-    # that the kernel itself runs and how it scales vs the oracle)
+    # that the kernel itself runs and how it scales vs the oracle),
+    # exercised in chunked form (T=8 in two 4-cycle slabs)
     n, w, t_steps = 16, 4, 8
     weights, _, v, st, teach = _operands(n, w, seed=3)
     spk = jnp.asarray(rng.integers(0, 2**32, (t_steps, w), dtype=np.uint32))
     t_i = time_fn(
         lambda *a: ops.fused_snn_window(*a, n_syn=w * 32, backend="interp",
-                                        **KW),
+                                        t_chunk=4, **KW),
         weights, spk, v, st, teach, reps=3, warmup=1)
-    emit(f"kernels/window-interp-{n}x{w * 32}xT{t_steps}", t_i,
+    emit(f"kernels/window-interp-{n}x{w * 32}xT{t_steps}c4", t_i,
          "backend=interp")
     return out
 

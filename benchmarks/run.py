@@ -27,6 +27,12 @@ import json
 import sys
 import time
 
+# NOTE: the sharded-window benchmark row needs a multi-device mesh;
+# kernels_bench runs it in a subprocess with
+# --xla_force_host_platform_device_count set there, NOT here — forcing
+# the flag in this process would split the CPU thread pool eight ways
+# and skew every other wall-clock row.
+
 
 def main(argv: list[str] | None = None) -> None:
     from benchmarks import (common, fig4_energy, fig5_neurons,

@@ -5,7 +5,14 @@ soft threshold -> Poisson rate encoding -> supervised binary-stochastic-
 STDP training with active learning -> test-set classification.
 
 Run:  PYTHONPATH=src python examples/mnist_stdp.py \
-          [--neurons 40] [--wexp 128] [--train 2000] [--test 1000]
+          [--neurons 40] [--wexp 128] [--train 2000] [--test 1000] \
+          [--cycle-backend window|step] [--kernel-backend ref|interp|tpu] \
+          [--train-mode active|parallel] [--window-chunk T_CHUNK]
+
+The backend/batching flags drive the same execution paths the kernel
+benchmarks measure: ``--cycle-backend window`` is the time-resident
+window kernel, ``--train-mode parallel`` the batched training grid,
+``--window-chunk`` the bounded-VMEM chunked spike streaming.
 """
 
 from __future__ import annotations
@@ -34,6 +41,21 @@ def main() -> None:
     ap.add_argument("--test", type=int, default=1000)
     ap.add_argument("--epochs", type=int, default=2)
     ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--cycle-backend", default="window",
+                    choices=["window", "step"],
+                    help="window = time-resident fused kernel, "
+                         "step = per-cycle scan")
+    ap.add_argument("--kernel-backend", default="ref",
+                    choices=["ref", "interp", "tpu"],
+                    help="window-kernel implementation (interp runs the "
+                         "Pallas body in Python — slow, validation only)")
+    ap.add_argument("--train-mode", default="active",
+                    choices=["active", "parallel"],
+                    help="active = sequential error-driven blocks, "
+                         "parallel = all blocks in one batched grid")
+    ap.add_argument("--window-chunk", type=int, default=None,
+                    help="stream the spike window through VMEM in "
+                         "chunks of this many cycles (kernel backends)")
     args = ap.parse_args()
 
     print("rendering + preprocessing digits ...")
@@ -44,9 +66,15 @@ def main() -> None:
     tr, te = pp(imgs), pp(timgs)
 
     cfg = dataclasses.replace(WENQUXING_22A, n_neurons=args.neurons,
-                              w_exp=args.wexp, epochs=args.epochs)
+                              w_exp=args.wexp, epochs=args.epochs,
+                              cycle_backend=args.cycle_backend,
+                              kernel_backend=args.kernel_backend,
+                              train_mode=args.train_mode,
+                              window_chunk=args.window_chunk)
     print(f"training 784-{args.neurons} (w_exp={args.wexp}, "
-          f"{args.epochs} epochs, {args.train} samples) ...")
+          f"{args.epochs} epochs, {args.train} samples, "
+          f"{args.train_mode}/{args.cycle_backend}/"
+          f"{args.kernel_backend}) ...")
     t0 = time.time()
     model = train(cfg, tr, labels)
     print(f"  trained in {time.time() - t0:.1f}s")

@@ -21,6 +21,15 @@ Two execution strategies:
 
 ``kernel_backend`` selects the kernel implementation for the window path
 ("ref" = XLA scan oracle, "interp" = Pallas interpret, "tpu" = compiled).
+``window_chunk`` streams the spike window through VMEM in fixed-size
+slabs (kernel backends only; bit-exact with the unchunked launch), so T
+is unbounded at bounded VMEM.
+
+Batched training (``train_stream_batch``): B independent streams — one
+batched :class:`SnnRegFile` (leading stream axis on every leaf) — train
+in ONE kernel launch per presented sample via ``ops.train_window_batch``
+instead of B sequential ``train_stream`` scans.  Stream b is bit-exact
+with a sequential ``train_stream`` run from regfile b.
 """
 
 from __future__ import annotations
@@ -83,6 +92,7 @@ def run_sample(
     *,
     cycle_backend: str = "window",
     kernel_backend: str = "ref",
+    window_chunk: int | None = None,
 ) -> SNNOutput:
     """Present one sample for T cycles.  stdp=None -> inference."""
     _check_backend(cycle_backend)
@@ -93,7 +103,7 @@ def run_sample(
                      else teach.astype(jnp.int32))
         w2, v2, fired, lf2 = ops.fused_snn_window(
             rf.weights, spike_train, rf.v, rf.lfsr, teach_arr,
-            backend=kernel_backend, **params)
+            backend=kernel_backend, t_chunk=window_chunk, **params)
         rf_out = rf._replace(
             weights=w2, v=v2, lfsr=lf2,
             spike=spike_train[-1].astype(jnp.uint32))
@@ -125,6 +135,7 @@ def infer_batch(
     *,
     cycle_backend: str = "window",
     kernel_backend: str = "ref",
+    window_chunk: int | None = None,
 ) -> jnp.ndarray:
     """Spike counts int32[B, n] for a batch (weights frozen).
 
@@ -140,6 +151,7 @@ def infer_batch(
         return ops.infer_window_batch(weights, spike_trains,
                                       threshold=params["threshold"],
                                       leak=params["leak"],
+                                      t_chunk=window_chunk,
                                       backend=kernel_backend)
     rf0 = snn_regfile(weights)
 
@@ -159,6 +171,7 @@ def train_stream(
     *,
     cycle_backend: str = "window",
     kernel_backend: str = "ref",
+    window_chunk: int | None = None,
 ) -> tuple[SnnRegFile, jnp.ndarray]:
     """Online STDP over a stream of samples (sequential, as in hardware).
 
@@ -170,7 +183,71 @@ def train_stream(
         carry = reset_between_samples(carry)
         out = run_sample(carry, train, lif, stdp, tch,
                          cycle_backend=cycle_backend,
-                         kernel_backend=kernel_backend)
+                         kernel_backend=kernel_backend,
+                         window_chunk=window_chunk)
         return out.regfile, out.spike_counts
 
     return jax.lax.scan(body, rf, (spike_trains, teach))
+
+
+def train_stream_batch(
+    rfs: SnnRegFile,            # batched regfile (leading stream axis B)
+    spike_trains: jnp.ndarray,  # uint32[B, N, T, w] per-stream samples
+    teach: jnp.ndarray,         # int32[B, N, n] per-stream teachers
+    lif: LIFParams,
+    stdp: STDPParams,
+    *,
+    cycle_backend: str = "window",
+    kernel_backend: str = "ref",
+    window_chunk: int | None = None,
+) -> tuple[SnnRegFile, jnp.ndarray]:
+    """Online STDP over B independent streams, batched per launch.
+
+    Each presented sample is ONE ``ops.train_window_batch`` launch
+    covering all B streams (per-stream weights/v/LFSR regfiles), instead
+    of B sequential :func:`train_stream` scans — the batched training
+    grid.  Stream b is bit-exact (incl. its LFSR sequence) with
+    ``train_stream(rf_b, spike_trains[b], teach[b], ...)``.
+
+    LIF/STDP params are shared across streams (they lower as kernel
+    literals).  Falls back to a vmap of per-cycle scans when params
+    arrive traced or ``cycle_backend="step"``.
+
+    Returns (rfs', spike_counts int32[B, N, n]).
+    """
+    _check_backend(cycle_backend)
+    params = (_window_params(lif, stdp)
+              if cycle_backend == "window" else None)
+    # scan over the sample axis: [B, N, ...] -> [N, B, ...]
+    trains_t = jnp.swapaxes(spike_trains, 0, 1)
+    teach_t = jnp.swapaxes(teach, 0, 1)
+
+    if params is not None:
+        params = {k: v for k, v in params.items() if k != "train"}
+
+        def body(carry: SnnRegFile, inp):
+            trains, tch = inp
+            w2, v2, fired, lf2 = ops.train_window_batch(
+                carry.weights, trains, jnp.zeros_like(carry.v),
+                carry.lfsr, tch.astype(jnp.int32),
+                backend=kernel_backend, t_chunk=window_chunk, **params)
+            carry = carry._replace(
+                weights=w2, v=v2, lfsr=lf2,
+                spike=trains[:, -1].astype(jnp.uint32))
+            return carry, jnp.sum(fired.astype(jnp.int32), axis=1)
+
+        rfs_out, counts = jax.lax.scan(body, rfs, (trains_t, teach_t))
+        return rfs_out, jnp.swapaxes(counts, 0, 1)
+
+    def body(carry: SnnRegFile, inp):
+        trains, tch = inp
+
+        def one(rf_b, train_b, tch_b):
+            out = run_sample(reset_between_samples(rf_b), train_b, lif,
+                             stdp, tch_b, cycle_backend="step")
+            return out.regfile, out.spike_counts
+
+        return jax.vmap(one)(carry, trains, tch)
+
+    rfs_out, counts = jax.lax.scan(body, rfs, (trains_t, teach_t))
+    return rfs_out, jnp.swapaxes(counts, 0, 1)

@@ -69,6 +69,26 @@ def snn_regfile(weights: jnp.ndarray, seed: int = 0x22A) -> SnnRegFile:
     )
 
 
+def snn_regfile_batch(weights: jnp.ndarray, seeds) -> SnnRegFile:
+    """B independent register files as one batched SnnRegFile.
+
+    weights: uint32[B, n, w]; seeds: B per-stream LFSR base seeds.
+    Every leaf gains a leading stream axis; stream b is exactly
+    ``snn_regfile(weights[b], seeds[b])``, so batched execution can be
+    checked bit-exactly against B sequential regfiles.
+    """
+    b, n, w = weights.shape
+    if len(seeds) != b:
+        raise ValueError(f"need {b} seeds, got {len(seeds)}")
+    return SnnRegFile(
+        spike=jnp.zeros((b, w), jnp.uint32),
+        v=jnp.zeros((b, n), jnp.int32),
+        lfsr=jnp.stack([_lfsr.seed(int(s), n * w).reshape(n, w)
+                        for s in seeds]),
+        weights=weights,
+    )
+
+
 # --- SPU ------------------------------------------------------------------
 
 def snn_ls(rf: SnnRegFile, spike_words: jnp.ndarray) -> SnnRegFile:

@@ -8,6 +8,14 @@ the training set, collect the misclassified samples, then train a fresh
 block of 10 neurons *on the error samples only*, supervised by their
 labels; repeat until the target population size.  Classification is by
 the class of the maximally-firing neuron across all blocks.
+
+``train_mode="parallel"`` instead trains ALL blocks concurrently on the
+full training set — one ``network.train_stream_batch`` launch per
+presented sample covers every block (per-block weights/v/LFSR regfiles,
+decorrelated by per-block LFSR seeds) — trading the active-learning
+curriculum for a B-way batched training grid.  STDP meta-parameters are
+kernel literals shared across the batch, so every block uses the base
+``ltp_prob``.
 """
 
 from __future__ import annotations
@@ -23,7 +31,7 @@ from repro.core import network
 from repro.core.bitpack import n_words
 from repro.core.encoder import poisson_encode_batch
 from repro.core.lif import LIFParams, lif_params
-from repro.core.rvsnn import snn_regfile
+from repro.core.rvsnn import snn_regfile, snn_regfile_batch
 from repro.core.stdp import STDPParams, init_weights, stdp_params
 
 
@@ -46,6 +54,10 @@ class SNNTrainConfig:
     seed: int = 0x22A
     cycle_backend: str = "window"   # "window" (time-resident) | "step"
     kernel_backend: str = "ref"     # "ref" | "interp" | "tpu"
+    train_mode: str = "active"      # "active" (sequential blocks on the
+                                    # error set) | "parallel" (batched
+                                    # training grid, all blocks at once)
+    window_chunk: int | None = None  # VMEM spike-slab size (None = T)
 
     @property
     def n_blocks(self) -> int:
@@ -78,22 +90,67 @@ def _teacher(labels: jnp.ndarray, cfg: SNNTrainConfig) -> jnp.ndarray:
     return onehot * cfg.teach_pos + (1 - onehot) * cfg.teach_neg
 
 
+def _regfile_seed(key: jax.Array) -> int:
+    """Fold a PRNG key into a nonzero 16-bit LFSR base seed."""
+    return int(jax.random.randint(key, (), 1, 1 << 16))
+
+
 def _train_block(cfg: SNNTrainConfig, key: jax.Array,
                  spike_trains: jnp.ndarray, labels: jnp.ndarray,
                  block_idx: int) -> jnp.ndarray:
-    """Train one 10-neuron block online over (possibly repeated) samples."""
+    """Train one 10-neuron block online over (possibly repeated) samples.
+
+    ``key`` seeds the block's LFSR lanes (stochastic-STDP randomness), so
+    per-block randomness is keyed; the default ``train()`` key chain is
+    derived from ``cfg.seed``, keeping default-seed runs reproducible.
+    """
     w0 = init_weights(cfg.n_classes, cfg.words, dense=True)
-    rf = snn_regfile(w0, seed=cfg.seed + 17 * block_idx)
+    rf = snn_regfile(w0, seed=_regfile_seed(key))
     teach = _teacher(labels, cfg)
     # LIF/STDP params are closed over (not jit arguments) so they stay
     # concrete at trace time and lower as window-kernel literals.
     step = jax.jit(functools.partial(
         network.train_stream, lif=cfg.lif(), stdp=cfg.stdp(block_idx),
         cycle_backend=cfg.cycle_backend,
-        kernel_backend=cfg.kernel_backend))
+        kernel_backend=cfg.kernel_backend,
+        window_chunk=cfg.window_chunk))
     for _ in range(cfg.epochs):
         rf, _ = step(rf, spike_trains, teach)
     return rf.weights
+
+
+def _train_blocks_parallel(cfg: SNNTrainConfig, key: jax.Array,
+                           spike_trains: jnp.ndarray,
+                           labels: jnp.ndarray) -> jnp.ndarray:
+    """Train all blocks concurrently on the full set (batched grid).
+
+    Every presented sample is one ``train_window_batch`` launch covering
+    the B = n_blocks per-block regfiles; blocks differ only by their
+    keyed LFSR seeds (stochastic STDP decorrelates them).  Returns
+    packed weights uint32[n_neurons, words].
+    """
+    b = cfg.n_blocks
+    w0 = jnp.broadcast_to(
+        init_weights(cfg.n_classes, cfg.words, dense=True),
+        (b, cfg.n_classes, cfg.words))
+    # blocks differ ONLY by these seeds, and lfsr.seed folds its base to
+    # 16 bits — draw without replacement so no two blocks can collide
+    # into bit-identical training runs
+    seeds = [int(s) + 1
+             for s in jax.random.choice(key, (1 << 16) - 1, (b,),
+                                        replace=False)]
+    rfs = snn_regfile_batch(w0, seeds)
+    teach = _teacher(labels, cfg)
+    teach_b = jnp.broadcast_to(teach, (b,) + teach.shape)
+    trains_b = jnp.broadcast_to(spike_trains, (b,) + spike_trains.shape)
+    step = jax.jit(functools.partial(
+        network.train_stream_batch, lif=cfg.lif(), stdp=cfg.stdp(0),
+        cycle_backend=cfg.cycle_backend,
+        kernel_backend=cfg.kernel_backend,
+        window_chunk=cfg.window_chunk))
+    for _ in range(cfg.epochs):
+        rfs, _ = step(rfs, trains_b, teach_b)
+    return rfs.weights.reshape(b * cfg.n_classes, cfg.words)
 
 
 def classify(model: SNNModel, spike_trains: jnp.ndarray) -> jnp.ndarray:
@@ -101,7 +158,8 @@ def classify(model: SNNModel, spike_trains: jnp.ndarray) -> jnp.ndarray:
     counts = network.infer_batch(
         model.weights, spike_trains, model.cfg.lif(),
         cycle_backend=model.cfg.cycle_backend,
-        kernel_backend=model.cfg.kernel_backend)
+        kernel_backend=model.cfg.kernel_backend,
+        window_chunk=model.cfg.window_chunk)
     best = jnp.argmax(counts, axis=-1)
     return model.neuron_class[best]
 
@@ -119,12 +177,22 @@ def train(cfg: SNNTrainConfig, images: np.ndarray, labels: np.ndarray,
     images: float32[N, n_inputs] normalized (already preprocessed);
     labels: int[N].
     """
+    if cfg.train_mode not in ("active", "parallel"):
+        raise ValueError(f"train_mode must be 'active' or 'parallel', "
+                         f"got {cfg.train_mode!r}")
     if key is None:
         key = jax.random.key(cfg.seed)
     key, ek = jax.random.split(key)
     spike_trains = poisson_encode_batch(
         ek, jnp.asarray(images, jnp.float32), cfg.n_steps)
     labels_j = jnp.asarray(labels, jnp.int32)
+
+    if cfg.train_mode == "parallel":
+        key, bk = jax.random.split(key)
+        weights = _train_blocks_parallel(cfg, bk, spike_trains, labels_j)
+        classes = jnp.tile(jnp.arange(cfg.n_classes, dtype=jnp.int32),
+                           cfg.n_blocks)
+        return SNNModel(weights, classes, cfg)
 
     blocks: list[jnp.ndarray] = []
     classes: list[jnp.ndarray] = []

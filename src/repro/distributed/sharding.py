@@ -50,6 +50,12 @@ DEFAULT_RULES: dict = {
     "p_out": "model",         # output dim (heads/ffn packed)
     "p_experts": None,
     "layers": None,           # stacked-layer leading axis
+    # SNN window engine (repro.distributed.snn_mesh): the neuron axis
+    # shards across a 1-D "neuron" mesh — rows are independent (LFSR
+    # lanes are per-neuron, so shards carry no cross-device PRNG state);
+    # the packed synapse-word axis stays replicated with its row.
+    "neurons": "neuron",
+    "syn_words": None,
 }
 
 # Sequence-parallel attention variant: for archs whose head counts do not

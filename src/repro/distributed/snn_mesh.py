@@ -1,0 +1,243 @@
+"""Neuron-axis mesh sharding of the SNN window engine.
+
+The window kernels grid over neuron blocks independently — every neuron
+row owns its weights, membrane and LFSR lanes, and the (small) packed
+spike window is shared read-only.  That makes the n axis trivially
+spatial: ``shard_map`` the window ops over a 1-D "neuron" mesh and each
+device runs the SAME kernels on its n/D-row shard, with no collectives
+and no cross-device PRNG state.  Populations then scale past one core's
+VMEM by adding devices.
+
+Specs come from the logical-axis machinery in
+:mod:`repro.distributed.sharding`: state matrices are ("neurons",
+"syn_words"), per-neuron vectors ("neurons",), spike windows replicated.
+
+Entry point (runs on a forced-multi-device CPU mesh in containers
+without TPUs)::
+
+    python -m repro.distributed.snn_mesh --check            # 8 devices
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python -m repro.distributed.snn_mesh --check --devices 4
+
+``--check`` asserts sharded == single-device outputs bit-exactly for
+both ``infer_window_batch`` and ``fused_snn_window`` (train and infer).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import sys
+
+if __name__ == "__main__":  # before any jax backend initialization
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import logical_spec, use_rules
+from repro.kernels import ops
+
+_AXIS = "neuron"
+
+
+def snn_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D mesh over (the first n of) the available devices."""
+    devs = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(f"asked for {n_devices} devices, "
+                             f"have {len(devs)}")
+        devs = devs[:n_devices]
+    import numpy as np
+    return Mesh(np.asarray(devs), (_AXIS,))
+
+
+def _specs(mesh: Mesh, *names_tuples):
+    rules = use_rules()
+    return tuple(logical_spec(names, rules, mesh) for names in names_tuples)
+
+
+def _pad_rows(x: jnp.ndarray, mult: int, fill=0) -> jnp.ndarray:
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[0] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def sharded_infer_window_batch(weights, spike_trains, *, threshold: int,
+                               leak: int, t_chunk: int | None = None,
+                               backend: str = "ref",
+                               mesh: Mesh | None = None) -> jnp.ndarray:
+    """:func:`ops.infer_window_batch` over a neuron-sharded mesh.
+
+    weights u32[n, w] shard on n; spike_trains u32[B, T, w] replicate;
+    counts i32[B, n] come back n-sharded and are reassembled.  Bit-exact
+    with the single-device op.
+    """
+    mesh = snn_mesh() if mesh is None else mesh
+    d = mesh.shape[_AXIS]
+    n = weights.shape[0]
+    wp = _pad_rows(weights, d)
+    row, rep3, out = _specs(mesh, ("neurons", "syn_words"),
+                            (None, None, "syn_words"), (None, "neurons"))
+    fn = shard_map(
+        functools.partial(ops.infer_window_batch, threshold=threshold,
+                          leak=leak, t_chunk=t_chunk, backend=backend),
+        mesh=mesh, in_specs=(row, rep3), out_specs=out, check_rep=False)
+    return fn(wp, spike_trains)[:, :n]
+
+
+def sharded_fused_snn_window(weights, spike_train, v, lfsr_state, teach, *,
+                             threshold: int, leak: int, w_exp: int,
+                             gain: int, n_syn: int, ltp_prob: int = 1023,
+                             train: bool = True,
+                             t_chunk: int | None = None,
+                             backend: str = "ref",
+                             mesh: Mesh | None = None):
+    """:func:`ops.fused_snn_window` over a neuron-sharded mesh.
+
+    weights/lfsr u32[n, w], v/teach i32[n] shard on n; the spike window
+    replicates; the fired raster bool[T, n] comes back n-sharded.  Each
+    shard's LFSR lanes travel with its rows, so training stays bit-exact
+    with the single-device op (incl. the LFSR sequence).
+    Returns (weights', v', fired bool[T, n], lfsr').
+    """
+    mesh = snn_mesh() if mesh is None else mesh
+    d = mesh.shape[_AXIS]
+    n = weights.shape[0]
+    wp = _pad_rows(weights, d)
+    vp = _pad_rows(v, d)
+    tp = _pad_rows(teach, d)
+    sp = _pad_rows(lfsr_state, d, fill=1)
+    row, vec, rep2, ras = _specs(
+        mesh, ("neurons", "syn_words"), ("neurons",),
+        (None, "syn_words"), (None, "neurons"))
+    fn = shard_map(
+        functools.partial(ops.fused_snn_window, threshold=threshold,
+                          leak=leak, w_exp=w_exp, gain=gain, n_syn=n_syn,
+                          ltp_prob=ltp_prob, train=train, t_chunk=t_chunk,
+                          backend=backend),
+        mesh=mesh, in_specs=(row, rep2, vec, row, vec),
+        out_specs=(row, vec, ras, row), check_rep=False)
+    w2, v2, fired, s2 = fn(wp, spike_train, vp, sp, tp)
+    return w2[:n], v2[:n], fired[:, :n], s2[:n]
+
+
+def _check(args) -> int:
+    import numpy as np
+
+    mesh = snn_mesh(args.devices)
+    d = mesh.shape[_AXIS]
+    rng = np.random.default_rng(0x22A)
+    n, w, t, b = args.neurons, args.words, args.steps, args.batch
+    weights = jnp.asarray(rng.integers(0, 2**32, (n, w), dtype=np.uint32))
+    trains = jnp.asarray(
+        rng.integers(0, 2**32, (b, t, w), dtype=np.uint32))
+    v = jnp.zeros((n,), jnp.int32)
+    teach = jnp.asarray(rng.integers(-50, 50, (n,), dtype=np.int32))
+    from repro.core import lfsr
+    st = lfsr.seed(7, n * w).reshape(n, w)
+    kw = dict(threshold=60, leak=4, w_exp=64, gain=4, n_syn=w * 32,
+              ltp_prob=200)
+
+    got = sharded_infer_window_batch(
+        weights, trains, threshold=60, leak=4, backend=args.backend,
+        mesh=mesh)
+    want = ops.infer_window_batch(weights, trains, threshold=60, leak=4,
+                                  backend=args.backend)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    print(f"infer_window_batch: sharded({d} devices) == single-device "
+          f"[B={b}, n={n}]")
+
+    for train in (True, False):
+        got = sharded_fused_snn_window(
+            weights, trains[0], v, st, teach, train=train,
+            backend=args.backend, mesh=mesh, **kw)
+        want = ops.fused_snn_window(weights, trains[0], v, st, teach,
+                                    train=train, backend=args.backend,
+                                    **kw)
+        for g, r in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+        print(f"fused_snn_window(train={train}): sharded == "
+              f"single-device [n={n}, T={t}]")
+    print("OK")
+    return 0
+
+
+def _bench(args) -> int:
+    """Time sharded vs single-device serving; print one parseable line.
+
+    Meant to run in a fresh process (benchmarks/kernels_bench.py spawns
+    it with --xla_force_host_platform_device_count) so the forced
+    multi-device CPU mesh cannot skew the parent's timings.
+    """
+    import time as _time
+
+    import numpy as np
+
+    mesh = snn_mesh(args.devices)
+    d = mesh.shape[_AXIS]
+    rng = np.random.default_rng(5)
+    n, w, t, b = args.neurons, args.words, args.steps, args.batch
+    weights = jnp.asarray(rng.integers(0, 2**32, (n, w), dtype=np.uint32))
+    trains = jnp.asarray(
+        rng.integers(0, 2**32, (b, t, w), dtype=np.uint32))
+    single = jax.jit(functools.partial(
+        ops.infer_window_batch, threshold=192, leak=16,
+        backend=args.backend))
+    # jit once so repeated calls hit the compile cache — timing a fresh
+    # shard_map build per call would measure tracing, not execution
+    shard = jax.jit(functools.partial(
+        sharded_infer_window_batch, threshold=192, leak=16,
+        backend=args.backend, mesh=mesh))
+
+    def med_us(fn):
+        for _ in range(2):
+            jax.block_until_ready(fn(weights, trains))
+        ts = []
+        for _ in range(5):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn(weights, trains))
+            ts.append(_time.perf_counter() - t0)
+        return float(np.median(ts) * 1e6)
+
+    t_1, t_d = med_us(single), med_us(shard)
+    print(f"BENCH devices={d} n={n} words={w} t_single_us={t_1:.2f} "
+          f"t_shard_us={t_d:.2f}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--devices", type=int, default=None,
+                    help="mesh size (default: all devices)")
+    ap.add_argument("--neurons", type=int, default=264)
+    ap.add_argument("--words", type=int, default=25)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--backend", default="ref",
+                    choices=["ref", "interp", "tpu"])
+    ap.add_argument("--check", action="store_true",
+                    help="assert sharded == unsharded and exit")
+    ap.add_argument("--bench", action="store_true",
+                    help="time sharded vs single-device and exit")
+    args = ap.parse_args(argv)
+    print(f"devices: {jax.device_count()} "
+          f"({jax.devices()[0].platform})")
+    if args.bench:
+        return _bench(args)
+    return _check(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -53,6 +53,19 @@ def _pad_state(x: jnp.ndarray, bn: int, fill=0) -> jnp.ndarray:
     return _pad_to(_pad_to(x, 1, _LANES, fill=fill), 0, bn, fill=fill)
 
 
+def _pad_window(spike_train: jnp.ndarray, t_chunk: int | None
+                ) -> tuple[jnp.ndarray, int]:
+    """Zero-pad the time axis (axis -2) to a t_chunk multiple.
+
+    Returns (padded train, effective chunk).  Padded cycles are masked
+    inside the kernels via the ``t_total`` literal, so chunked and
+    unchunked launches are bit-exact.
+    """
+    t_steps = spike_train.shape[-2]
+    tc = t_steps if t_chunk is None else max(1, min(t_chunk, t_steps))
+    return _pad_to(spike_train, spike_train.ndim - 2, tc), tc
+
+
 def _prep(weights, pre, block_w_mult=_LANES):
     n, w = weights.shape
     bn = _block_n(max(8, n))
@@ -133,15 +146,18 @@ def fused_snn_step(weights, pre_spikes, v, lfsr_state, teach, *,
 
 @functools.partial(jax.jit, static_argnames=(
     "threshold", "leak", "w_exp", "gain", "n_syn", "ltp_prob", "train",
-    "backend"))
+    "t_chunk", "backend"))
 def fused_snn_window(weights, spike_train, v, lfsr_state, teach, *,
                      threshold: int, leak: int, w_exp: int, gain: int,
                      n_syn: int, ltp_prob: int = 1023, train: bool = True,
-                     backend: str = "ref"):
+                     t_chunk: int | None = None, backend: str = "ref"):
     """T ``snn.step`` cycles with weights/v/LFSR resident in VMEM.
 
     spike_train: uint32[T, w].  Bit-exact with T sequential
     :func:`fused_snn_step` calls (including the LFSR sequence).
+    ``t_chunk`` streams the window through VMEM in t_chunk-cycle slabs
+    (ragged tails are zero-padded and masked) — same results, bounded
+    VMEM for arbitrarily long windows.
     Returns (weights', v', fired bool[T, n], lfsr').
     """
     if backend == "ref":
@@ -149,35 +165,74 @@ def fused_snn_window(weights, spike_train, v, lfsr_state, teach, *,
             weights, spike_train, v, lfsr_state, teach, threshold, leak,
             w_exp, gain, n_syn, ltp_prob, train)
     n, w = weights.shape
+    t_steps = spike_train.shape[0]
     bn = max(_block_n(max(8, n)), 8)
     wp = _pad_state(weights, bn)
-    stp = _pad_to(spike_train, 1, _LANES)
+    stp, tc = _pad_window(_pad_to(spike_train, 1, _LANES), t_chunk)
     vp = _pad_to(v, 0, bn)
     tp = _pad_to(teach, 0, bn)
     sp = _pad_state(lfsr_state, bn, fill=1)
     w2, v2, f, s2 = _k.fused_snn_window(
         wp, stp, vp, sp, tp, threshold=threshold, leak=leak, w_exp=w_exp,
         gain=gain, n_syn=n_syn, ltp_prob=ltp_prob, train=train,
-        block_n=bn, interpret=(backend == "interp"))
-    return w2[:n, :w], v2[:n], f[:, :n], s2[:n, :w]
+        block_n=bn, t_chunk=tc, t_total=t_steps,
+        interpret=(backend == "interp"))
+    return w2[:n, :w], v2[:n], f[:t_steps, :n], s2[:n, :w]
 
 
-@functools.partial(jax.jit, static_argnames=("threshold", "leak", "backend"))
+@functools.partial(jax.jit, static_argnames=(
+    "threshold", "leak", "w_exp", "gain", "n_syn", "ltp_prob", "t_chunk",
+    "backend"))
+def train_window_batch(weights, spike_trains, v, lfsr_state, teach, *,
+                       threshold: int, leak: int, w_exp: int, gain: int,
+                       n_syn: int, ltp_prob: int = 1023,
+                       t_chunk: int | None = None, backend: str = "ref"):
+    """Batched training grid: B independent streams per launch.
+
+    weights/lfsr u32[B, n, w], spike_trains u32[B, T, w], v i32[B, n],
+    teach i32[B, n] — per-stream regfiles, one grid ordered
+    (neuron-block major, batch, time-chunk minor).  Bit-exact with B
+    sequential :func:`fused_snn_window` runs, including each stream's
+    LFSR sequence.  Returns (weights', v', fired bool[B, T, n], lfsr').
+    """
+    if backend == "ref":
+        return _ref.train_window_batch_ref(
+            weights, spike_trains, v, lfsr_state, teach, threshold, leak,
+            w_exp, gain, n_syn, ltp_prob)
+    b, n, w = weights.shape
+    t_steps = spike_trains.shape[1]
+    bn = max(_block_n(max(8, n)), 8)
+    wp = _pad_to(_pad_to(weights, 2, _LANES), 1, bn)
+    stp, tc = _pad_window(_pad_to(spike_trains, 2, _LANES), t_chunk)
+    vp = _pad_to(v, 1, bn)
+    tp = _pad_to(teach, 1, bn)
+    sp = _pad_to(_pad_to(lfsr_state, 2, _LANES, fill=1), 1, bn, fill=1)
+    w2, v2, f, s2 = _k.train_window_batch(
+        wp, stp, vp, sp, tp, threshold=threshold, leak=leak, w_exp=w_exp,
+        gain=gain, n_syn=n_syn, ltp_prob=ltp_prob, block_n=bn,
+        t_chunk=tc, t_total=t_steps, interpret=(backend == "interp"))
+    return (w2[:, :n, :w], v2[:, :n], f[:, :t_steps, :n], s2[:, :n, :w])
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "leak", "t_chunk",
+                                             "backend"))
 def infer_window_batch(weights, spike_trains, *, threshold: int, leak: int,
-                       backend: str = "ref"):
+                       t_chunk: int | None = None, backend: str = "ref"):
     """Serving path: spike counts int32[B, n] for B windows per launch.
 
     spike_trains: uint32[B, T, w]; weights frozen, membrane reset per
-    sample (``reset_between_samples`` semantics).
+    sample (``reset_between_samples`` semantics).  ``t_chunk`` bounds
+    the VMEM spike slab as in :func:`fused_snn_window`.
     """
     if backend == "ref":
         return _ref.infer_window_batch_ref(weights, spike_trains,
                                            threshold, leak)
     n, _ = weights.shape
+    t_steps = spike_trains.shape[1]
     bn = max(_block_n(max(8, n)), 8)
     wp = _pad_state(weights, bn)
-    stp = _pad_to(spike_trains, 2, _LANES)
+    stp, tc = _pad_window(_pad_to(spike_trains, 2, _LANES), t_chunk)
     counts = _k.infer_window_batch(
         wp, stp, threshold=threshold, leak=leak, block_n=bn,
-        interpret=(backend == "interp"))
+        t_chunk=tc, t_total=t_steps, interpret=(backend == "interp"))
     return counts[:, :n]

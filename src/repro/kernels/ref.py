@@ -80,6 +80,25 @@ def fused_snn_window_ref(weights, spike_train, v, lfsr_state, teach,
     return w2, v2, fired, st2
 
 
+def train_window_batch_ref(weights, spike_trains, v, lfsr_state, teach,
+                           threshold: int, leak: int, w_exp: int,
+                           gain: int, n_syn: int, ltp_prob: int):
+    """B independent training streams (the batched train kernel's oracle).
+
+    weights/lfsr u32[B, n, w], spike_trains u32[B, T, w], v i32[B, n],
+    teach i32[B, n].  Each stream is exactly one
+    :func:`fused_snn_window_ref` run — bit-exact (incl. each stream's
+    LFSR sequence) with B sequential single-stream windows.
+    Returns (weights', v', fired bool[B, T, n], lfsr').
+    """
+
+    def one(w, s, vv, st, tc):
+        return fused_snn_window_ref(w, s, vv, st, tc, threshold, leak,
+                                    w_exp, gain, n_syn, ltp_prob, True)
+
+    return jax.vmap(one)(weights, spike_trains, v, lfsr_state, teach)
+
+
 def infer_window_batch_ref(weights, spike_trains, threshold: int,
                            leak: int):
     """Serving oracle: spike counts int32[B, n], weights frozen, v reset."""

@@ -13,24 +13,38 @@ streamed**.  ``fused_snn_window`` loads the weight block, LFSR block and
 membrane block once, then a ``fori_loop`` over the T presentation cycles
 reads one (small) packed spike row per cycle and stores one fired row
 into the raster — weights/LFSR cross HBM once per *window*, not once per
-*cycle*.  The batch-inference kernel orders the grid (neuron-block
-major, batch minor) so a weight block stays resident across all B
-samples of a serving batch.
+*cycle*.  The batch kernels order the grid (neuron-block major, batch
+minor) so a shared weight block (inference) stays resident across all B
+samples of a serving batch, and B independent training streams share one
+launch.
 
-VMEM budget (per grid step, BN=128, padded words W<=2048, T<=256):
-  fused step:   in + out blocks of weights and LFSR
-                ~ 4 * BN * W * 4B = 4 MiB at the 64k-synapse extreme.
-  fused window: the same 4 MiB of state blocks, plus the streamed
-                spike window T * W * 4B (2 MiB at T=256, W=2048) and
-                the bool raster T * BN (32 KiB) — ~6 MiB worst case,
-                comfortably under the ~16 MiB v5e VMEM.
+Chunked spike streaming: every window kernel takes a ``t_chunk`` grid
+dimension (innermost, so per-(block, stream) state carries across
+chunks via revisited output blocks).  VMEM then holds ``T_chunk x W``
+spike words instead of ``T x W`` — unbounded T at bounded VMEM.  Chunk
+boundaries are bit-exact with the unchunked kernel: membrane/weight/
+LFSR state is read back from the (still-resident) output block, and a
+``t_total`` literal masks the zero-padded ragged tail so padded cycles
+advance no state.
+
+VMEM budget (per grid step, BN=128, padded words W<=2048):
+  fused step:    in + out blocks of weights and LFSR
+                 ~ 4 * BN * W * 4B = 4 MiB at the 64k-synapse extreme.
+  train window:  the same 4 MiB of state blocks, plus the streamed
+                 spike chunk T_chunk * W * 4B (256 KiB at T_chunk=32,
+                 W=2048) and the bool raster chunk T_chunk * BN (4 KiB)
+                 — ~4.3 MiB, *independent of T*; the unchunked launch
+                 (T_chunk = T) adds T * W * 4B, which caps T near 3k
+                 at W=2048 on a ~16 MiB v5e core.
+  infer window:  one weight block (2 MiB) + spike chunk + v/count rows
+                 — ~2.3 MiB per grid step at T_chunk=32.
 
 The fused kernels are the TPU microarchitecture of the paper's
 coarse-granularity ``snn.step`` instruction: one pass through VMEM does
 spike-process + LIF + STDP, where the unfused path round-trips HBM
-between the three stages — and the window kernel extends the same
-argument across the time axis (benchmarks/kernels_bench.py measures
-both levels of fusion).
+between the three stages — and the window kernels extend the same
+argument across the time axis and the batch/stream axis
+(benchmarks/kernels_bench.py measures all three levels).
 """
 
 from __future__ import annotations
@@ -240,64 +254,155 @@ def fused_snn_step(weights, pre_spikes, v, lfsr_state, teach, *,
     )(weights, pre_spikes[None, :], v, lfsr_state, teach)
 
 
-# --- time-resident fused window (T cycles per launch) -------------------------
+# --- batched + chunked training window (B streams x T cycles per launch) -----
 
-def _fused_window_kernel(threshold, leak, w_exp, gain, n_syn, ltp_prob,
-                         train,
+def _train_window_kernel(threshold, leak, w_exp, gain, n_syn, ltp_prob,
+                         t_chunk, t_total,
                          w_ref, s_ref, v_ref, st_ref, t_ref,
                          wo_ref, vo_ref, f_ref, sto_ref):
-    n_steps = s_ref.shape[0]
-    teach = t_ref[...]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        wo_ref[...] = w_ref[...]
+        vo_ref[...] = v_ref[...]
+        sto_ref[...] = st_ref[...]
+
+    teach = t_ref[...][0]
+    base = k * t_chunk
+    masked = t_total % t_chunk != 0   # zero-padded ragged tail present
 
     def cycle(t, carry):
         w, v, st = carry
-        pre = pl.load(s_ref, (pl.dslice(t, 1), slice(None)))   # (1, W)
+        pre = pl.load(s_ref, (pl.dslice(0, 1), pl.dslice(t, 1),
+                              slice(None)))[0]         # (1, W)
         counts = _popcount_rows(jnp.bitwise_and(pre, w)) + teach
         v_int = v + counts
         fired = v_int >= threshold
-        v_out = jnp.where(
+        v_next = jnp.where(
             fired, jnp.int32(0), jnp.maximum(v_int - leak, jnp.int32(0)))
-        pl.store(f_ref, (pl.dslice(t, 1), slice(None)), fired[None, :])
-        if train:
-            w, st = _stdp_body(w, pre, fired, st, w_exp=w_exp, gain=gain,
-                               n_syn=n_syn, ltp_prob=ltp_prob)
-        return w, v_out, st
+        if masked:
+            active = base + t < t_total
+            fired = jnp.logical_and(fired, active)
+            v_next = jnp.where(active, v_next, v)
+        pl.store(f_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 fired[None, None, :])
+        # masked `fired` also gates STDP: _stdp_body only commits w/LFSR
+        # for fired rows, so padded cycles advance no state.
+        w, st = _stdp_body(w, pre, fired, st, w_exp=w_exp, gain=gain,
+                           n_syn=n_syn, ltp_prob=ltp_prob)
+        return w, v_next, st
 
     w, v, st = jax.lax.fori_loop(
-        0, n_steps, cycle, (w_ref[...], v_ref[...], st_ref[...]))
-    wo_ref[...] = w
-    vo_ref[...] = v
-    sto_ref[...] = st
+        0, t_chunk, cycle,
+        (wo_ref[...][0], vo_ref[...][0], sto_ref[...][0]))
+    wo_ref[...] = w[None]
+    vo_ref[...] = v[None]
+    sto_ref[...] = st[None]
 
 
-def _window_infer_kernel(threshold, leak,
+def train_window_batch(weights, spike_trains, v, lfsr_state, teach, *,
+                       threshold: int, leak: int, w_exp: int, gain: int,
+                       n_syn: int, ltp_prob: int, block_n=128,
+                       t_chunk: int | None = None,
+                       t_total: int | None = None, interpret=False):
+    """B independent training streams, T fused SNNU cycles each.
+
+    weights/lfsr u32[B, n, w], spike_trains u32[B, T, w], v i32[B, n],
+    teach i32[B, n].  Grid is (neuron blocks, batch, time chunks) —
+    neuron-block major, batch next, chunk minor, so each stream's state
+    block stays VMEM-resident across all its chunks (the chunk axis
+    revisits the same output block; state is carried by reading it
+    back).  Per stream this is bit-exact with :func:`fused_snn_window`
+    (including the LFSR sequence).
+
+    ``t_chunk`` bounds the spike words in VMEM to t_chunk * w per grid
+    step (default: the whole window).  ``t_total`` masks the cycles
+    beyond the true window length when T was zero-padded up to a chunk
+    multiple; padded cycles store fired=False and advance no state.
+
+    Returns (weights', v', fired bool[B, T, n], lfsr').
+    """
+    b, n, w = weights.shape
+    t_steps = spike_trains.shape[1]
+    tc = t_steps if t_chunk is None else min(t_chunk, t_steps)
+    if t_steps % tc != 0:
+        raise ValueError(f"T={t_steps} not a multiple of t_chunk={tc}; "
+                         "pad the window (ops.py does)")
+    tt = t_steps if t_total is None else t_total
+    kern = functools.partial(_train_window_kernel, int(threshold),
+                             int(leak), w_exp, gain, n_syn, ltp_prob,
+                             tc, tt)
+    return pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((b, n, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((b, n), jnp.int32),
+                   jax.ShapeDtypeStruct((b, t_steps, n), jnp.bool_),
+                   jax.ShapeDtypeStruct((b, n, w), jnp.uint32)),
+        grid=(n // block_n, b, t_steps // tc),
+        in_specs=[
+            pl.BlockSpec((1, block_n, w), lambda i, j, k: (j, i, 0)),
+            pl.BlockSpec((1, tc, w), lambda i, j, k: (j, k, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (j, i)),
+            pl.BlockSpec((1, block_n, w), lambda i, j, k: (j, i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (j, i)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, block_n, w), lambda i, j, k: (j, i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (j, i)),
+            pl.BlockSpec((1, tc, block_n), lambda i, j, k: (j, k, i)),
+            pl.BlockSpec((1, block_n, w), lambda i, j, k: (j, i, 0)),
+        ),
+        interpret=interpret,
+    )(weights, spike_trains, v, lfsr_state, teach)
+
+
+# --- time-resident fused window (T cycles per launch) -------------------------
+
+def _window_infer_kernel(threshold, leak, t_chunk, t_total,
                          w_ref, s_ref, v_ref, t_ref, vo_ref, f_ref):
-    n_steps = s_ref.shape[0]
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        vo_ref[...] = v_ref[...]
+
     w = w_ref[...]
     teach = t_ref[...]
+    base = k * t_chunk
+    masked = t_total % t_chunk != 0
 
     def cycle(t, v):
         pre = pl.load(s_ref, (pl.dslice(t, 1), slice(None)))   # (1, W)
         v_int = v + _popcount_rows(jnp.bitwise_and(pre, w)) + teach
         fired = v_int >= threshold
-        pl.store(f_ref, (pl.dslice(t, 1), slice(None)), fired[None, :])
-        return jnp.where(
+        v_next = jnp.where(
             fired, jnp.int32(0), jnp.maximum(v_int - leak, jnp.int32(0)))
+        if masked:
+            active = base + t < t_total
+            fired = jnp.logical_and(fired, active)
+            v_next = jnp.where(active, v_next, v)
+        pl.store(f_ref, (pl.dslice(t, 1), slice(None)), fired[None, :])
+        return v_next
 
-    vo_ref[...] = jax.lax.fori_loop(0, n_steps, cycle, v_ref[...])
+    vo_ref[...] = jax.lax.fori_loop(0, t_chunk, cycle, vo_ref[...])
 
 
 def fused_snn_window(weights, spike_train, v, lfsr_state, teach, *,
                      threshold: int, leak: int, w_exp: int, gain: int,
                      n_syn: int, ltp_prob: int, train: bool = True,
-                     block_n=128, interpret=False):
-    """T fused SNNU cycles with VMEM-resident state.
+                     block_n=128, t_chunk: int | None = None,
+                     t_total: int | None = None, interpret=False):
+    """T fused SNNU cycles with VMEM-resident state (one stream).
 
-    spike_train: uint32[T, w] — the whole presentation window, streamed
-    one row per inner-loop cycle while weights/v/LFSR stay resident.
+    spike_train: uint32[T, w] — the presentation window, streamed one
+    row per inner-loop cycle while weights/v/LFSR stay resident; with
+    ``t_chunk`` set, VMEM holds one t_chunk-row slab of the window at a
+    time (see :func:`train_window_batch` for the carry/masking scheme).
     Per cycle this is bit-exact with :func:`fused_snn_step` (the LFSR
     advances through the identical sequence).
 
+    ``train=True`` is the B=1 case of :func:`train_window_batch`.
     ``train=False`` (SU idle) dispatches to a read-only variant whose
     launch declares no weight/LFSR outputs — those arrays cross HBM
     once inbound and the originals are passed through — so the
@@ -307,55 +412,51 @@ def fused_snn_window(weights, spike_train, v, lfsr_state, teach, *,
     """
     n, w = weights.shape
     t_steps = spike_train.shape[0]
+    tc = t_steps if t_chunk is None else min(t_chunk, t_steps)
+    if t_steps % tc != 0:
+        raise ValueError(f"T={t_steps} not a multiple of t_chunk={tc}; "
+                         "pad the window (ops.py does)")
+    tt = t_steps if t_total is None else t_total
     if not train:
         v2, fired = pl.pallas_call(
             functools.partial(_window_infer_kernel, int(threshold),
-                              int(leak)),
+                              int(leak), tc, tt),
             out_shape=(jax.ShapeDtypeStruct((n,), jnp.int32),
                        jax.ShapeDtypeStruct((t_steps, n), jnp.bool_)),
-            grid=(n // block_n,),
+            grid=(n // block_n, t_steps // tc),
             in_specs=[
-                pl.BlockSpec((block_n, w), lambda i: (i, 0)),
-                pl.BlockSpec((t_steps, w), lambda i: (0, 0)),
-                pl.BlockSpec((block_n,), lambda i: (i,)),
-                pl.BlockSpec((block_n,), lambda i: (i,)),
+                pl.BlockSpec((block_n, w), lambda i, k: (i, 0)),
+                pl.BlockSpec((tc, w), lambda i, k: (k, 0)),
+                pl.BlockSpec((block_n,), lambda i, k: (i,)),
+                pl.BlockSpec((block_n,), lambda i, k: (i,)),
             ],
-            out_specs=(pl.BlockSpec((block_n,), lambda i: (i,)),
-                       pl.BlockSpec((t_steps, block_n), lambda i: (0, i))),
+            out_specs=(pl.BlockSpec((block_n,), lambda i, k: (i,)),
+                       pl.BlockSpec((tc, block_n), lambda i, k: (k, i))),
             interpret=interpret,
         )(weights, spike_train, v, teach)
         return weights, v2, fired, lfsr_state
-    kern = functools.partial(_fused_window_kernel, int(threshold),
-                             int(leak), w_exp, gain, n_syn, ltp_prob,
-                             train)
-    return pl.pallas_call(
-        kern,
-        out_shape=(jax.ShapeDtypeStruct((n, w), jnp.uint32),
-                   jax.ShapeDtypeStruct((n,), jnp.int32),
-                   jax.ShapeDtypeStruct((t_steps, n), jnp.bool_),
-                   jax.ShapeDtypeStruct((n, w), jnp.uint32)),
-        grid=(n // block_n,),
-        in_specs=[
-            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
-            pl.BlockSpec((t_steps, w), lambda i: (0, 0)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-        ],
-        out_specs=(pl.BlockSpec((block_n, w), lambda i: (i, 0)),
-                   pl.BlockSpec((block_n,), lambda i: (i,)),
-                   pl.BlockSpec((t_steps, block_n), lambda i: (0, i)),
-                   pl.BlockSpec((block_n, w), lambda i: (i, 0))),
-        interpret=interpret,
-    )(weights, spike_train, v, lfsr_state, teach)
+    w2, v2, fired, s2 = train_window_batch(
+        weights[None], spike_train[None], v[None], lfsr_state[None],
+        teach[None], threshold=threshold, leak=leak, w_exp=w_exp,
+        gain=gain, n_syn=n_syn, ltp_prob=ltp_prob, block_n=block_n,
+        t_chunk=tc, t_total=tt, interpret=interpret)
+    return w2[0], v2[0], fired[0], s2[0]
 
 
 # --- batched inference window (serving path) ----------------------------------
 
-def _infer_window_kernel(threshold, leak, w_ref, s_ref, o_ref):
-    n_steps = s_ref.shape[1]
+def _infer_window_kernel(threshold, leak, t_chunk, t_total,
+                         w_ref, s_ref, o_ref, vo_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        vo_ref[...] = jnp.zeros_like(vo_ref)
+
     w = w_ref[...]
-    zero = jnp.zeros((w_ref.shape[0],), jnp.int32)
+    base = k * t_chunk
+    masked = t_total % t_chunk != 0
 
     def cycle(t, carry):
         v, acc = carry
@@ -363,37 +464,54 @@ def _infer_window_kernel(threshold, leak, w_ref, s_ref, o_ref):
                               slice(None)))[0]        # (1, W)
         v_int = v + _popcount_rows(jnp.bitwise_and(pre, w))
         fired = v_int >= threshold
-        v_out = jnp.where(
+        v_next = jnp.where(
             fired, jnp.int32(0), jnp.maximum(v_int - leak, jnp.int32(0)))
-        return v_out, acc + fired.astype(jnp.int32)
+        if masked:
+            active = base + t < t_total
+            fired = jnp.logical_and(fired, active)
+            v_next = jnp.where(active, v_next, v)
+        return v_next, acc + fired.astype(jnp.int32)
 
-    _, acc = jax.lax.fori_loop(0, n_steps, cycle, (zero, zero))
+    v, acc = jax.lax.fori_loop(
+        0, t_chunk, cycle, (vo_ref[...][0], o_ref[...][0]))
     o_ref[...] = acc[None, :]
+    vo_ref[...] = v[None, :]
 
 
 def infer_window_batch(weights, spike_trains, *, threshold: int,
-                       leak: int, block_n=128, interpret=False):
+                       leak: int, block_n=128, t_chunk: int | None = None,
+                       t_total: int | None = None, interpret=False):
     """Serving kernel: B frozen-weight windows per launch.
 
-    spike_trains: uint32[B, T, w].  Grid is (neuron blocks, batch) with
-    batch minor, so each weight block is fetched once and reused for all
-    B samples.  Membrane state starts from reset (v=0), matching
-    ``reset_between_samples`` semantics.
+    spike_trains: uint32[B, T, w].  Grid is (neuron blocks, batch, time
+    chunks) with batch/chunk minor, so each weight block is fetched once
+    and reused for all B samples and all chunks.  Membrane state starts
+    from reset (v=0), matching ``reset_between_samples`` semantics, and
+    carries across chunks through a revisited v output block (discarded
+    by the caller).
 
     Returns spike counts int32[B, n] over the window.
     """
     n, w = weights.shape
     b, t_steps, _ = spike_trains.shape
+    tc = t_steps if t_chunk is None else min(t_chunk, t_steps)
+    if t_steps % tc != 0:
+        raise ValueError(f"T={t_steps} not a multiple of t_chunk={tc}; "
+                         "pad the window (ops.py does)")
+    tt = t_steps if t_total is None else t_total
     kern = functools.partial(_infer_window_kernel, int(threshold),
-                             int(leak))
-    return pl.pallas_call(
+                             int(leak), tc, tt)
+    counts, _ = pl.pallas_call(
         kern,
-        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
-        grid=(n // block_n, b),
+        out_shape=(jax.ShapeDtypeStruct((b, n), jnp.int32),
+                   jax.ShapeDtypeStruct((b, n), jnp.int32)),
+        grid=(n // block_n, b, t_steps // tc),
         in_specs=[
-            pl.BlockSpec((block_n, w), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, t_steps, w), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((block_n, w), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, tc, w), lambda i, j, k: (j, k, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_n), lambda i, j: (j, i)),
+        out_specs=(pl.BlockSpec((1, block_n), lambda i, j, k: (j, i)),
+                   pl.BlockSpec((1, block_n), lambda i, j, k: (j, i))),
         interpret=interpret,
     )(weights, spike_trains)
+    return counts

@@ -165,6 +165,83 @@ def test_infer_window_batch_bit_exact(n, w, b):
             np.asarray(jnp.sum(fired.astype(jnp.int32), axis=0)))
 
 
+@pytest.mark.parametrize("t_chunk", [1, 2, 4, 5, 9, 16])
+@pytest.mark.parametrize("train", [True, False])
+def test_chunked_window_equals_unchunked(t_chunk, train):
+    """t_chunk-slab streaming == whole-window launch, bit-exact.
+
+    Covers dividing chunks (1, 9), ragged tails (2, 4, 5) and
+    t_chunk > T (16) at T=9.
+    """
+    n, w, t_steps = 33, 7, 9
+    weights, spk, v, teach, st = _window_operands(n, w, t_steps, seed=6)
+    kw = dict(threshold=60, leak=4, w_exp=64, gain=4, n_syn=w * 32,
+              ltp_prob=200)
+    want = ops.fused_snn_window(weights, spk, v, st, teach, train=train,
+                                backend="interp", **kw)
+    got = ops.fused_snn_window(weights, spk, v, st, teach, train=train,
+                               t_chunk=t_chunk, backend="interp", **kw)
+    for g, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+@pytest.mark.parametrize("t_chunk", [1, 3, 4, 11, 20])
+def test_chunked_infer_batch_equals_unchunked(t_chunk):
+    n, w, b, t_steps = 33, 7, 3, 11
+    rng = np.random.default_rng(9)
+    weights = _rand_words(rng, (n, w))
+    trains = _rand_words(rng, (b, t_steps, w))
+    want = ref.infer_window_batch_ref(weights, trains, 40, 3)
+    got = ops.infer_window_batch(weights, trains, threshold=40, leak=3,
+                                 t_chunk=t_chunk, backend="interp")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def _batch_operands(b, n, w, t_steps, seed=0):
+    rng = np.random.default_rng(seed)
+    weights = _rand_words(rng, (b, n, w))
+    spk = _rand_words(rng, (b, t_steps, w))
+    v = jnp.asarray(rng.integers(0, 200, (b, n), dtype=np.int32))
+    teach = jnp.asarray(rng.integers(-100, 100, (b, n), dtype=np.int32))
+    st = jnp.stack([lfsr.seed(11 + 13 * i, n * w).reshape(n, w)
+                    for i in range(b)])
+    return weights, spk, v, teach, st
+
+
+@pytest.mark.parametrize("n,w,b", [(8, 1, 2), (10, 25, 3), (33, 7, 2)])
+@pytest.mark.parametrize("backend", ["ref", "interp"])
+def test_train_window_batch_equals_sequential_streams(n, w, b, backend):
+    """Batched training grid == B sequential windows, incl. each
+    stream's LFSR sequence."""
+    t_steps = 7
+    weights, spk, v, teach, st = _batch_operands(b, n, w, t_steps, seed=3)
+    kw = dict(threshold=60, leak=4, w_exp=64, gain=4, n_syn=w * 32,
+              ltp_prob=200)
+    got = ops.train_window_batch(weights, spk, v, st, teach,
+                                 backend=backend, **kw)
+    for i in range(b):
+        want = ops.fused_snn_window(weights[i], spk[i], v[i], st[i],
+                                    teach[i], backend="ref", **kw)
+        for g, r in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g[i]),
+                                          np.asarray(r))
+
+
+@pytest.mark.parametrize("t_chunk", [2, 3, 7, 10])
+def test_train_window_batch_chunked(t_chunk):
+    """Batch grid + time chunking together stay bit-exact (ragged incl.)."""
+    b, n, w, t_steps = 2, 10, 3, 7
+    weights, spk, v, teach, st = _batch_operands(b, n, w, t_steps, seed=5)
+    kw = dict(threshold=30, leak=2, w_exp=32, gain=4, n_syn=w * 32,
+              ltp_prob=500)
+    want = ops.train_window_batch(weights, spk, v, st, teach,
+                                  backend="ref", **kw)
+    got = ops.train_window_batch(weights, spk, v, st, teach,
+                                 t_chunk=t_chunk, backend="interp", **kw)
+    for g, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
 def test_fused_equals_unfused_composition():
     """The fused kernel must equal SPU -> NU -> SU composition exactly."""
     rng = np.random.default_rng(0)

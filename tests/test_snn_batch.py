@@ -1,0 +1,118 @@
+"""Batched training grid at the network/trainer level, and the keyed
+trainer randomness fix."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import network
+from repro.core.encoder import poisson_encode_batch
+from repro.core.lif import lif_params
+from repro.core.rvsnn import snn_regfile, snn_regfile_batch
+from repro.core.stdp import init_weights, stdp_params
+from repro.core.trainer import SNNTrainConfig, _train_block, train
+from repro.data.digits import make_digits
+
+
+def _stream_operands(b, n, words, n_samples, t_steps):
+    lif = lif_params(40, 3)
+    stdp = stdp_params(words * 32, w_exp=30, gain=4, ltp_prob=500)
+    w0 = init_weights(n, words, dense=False)
+    trains = jnp.stack([
+        poisson_encode_batch(
+            jax.random.key(40 + i),
+            jax.random.uniform(jax.random.key(50 + i),
+                               (n_samples, words * 32)), t_steps)
+        for i in range(b)])
+    teach = jnp.asarray(np.random.default_rng(2).integers(
+        -50, 50, (b, n_samples, n), dtype=np.int32))
+    return lif, stdp, w0, trains, teach
+
+
+def test_train_stream_batch_matches_sequential_streams():
+    """Each batched stream == a sequential train_stream run (weights,
+    membrane, LFSR sequence and spike counts)."""
+    b, n, words, n_samples, t_steps = 3, 12, 3, 4, 20
+    lif, stdp, w0, trains, teach = _stream_operands(
+        b, n, words, n_samples, t_steps)
+    seeds = [101, 202, 303]
+    rfs = snn_regfile_batch(jnp.broadcast_to(w0, (b, n, words)), seeds)
+    rfs2, counts = network.train_stream_batch(rfs, trains, teach, lif,
+                                              stdp)
+    for i in range(b):
+        rf2, c2 = network.train_stream(snn_regfile(w0, seed=seeds[i]),
+                                       trains[i], teach[i], lif, stdp)
+        np.testing.assert_array_equal(np.asarray(rfs2.weights[i]),
+                                      np.asarray(rf2.weights))
+        np.testing.assert_array_equal(np.asarray(rfs2.lfsr[i]),
+                                      np.asarray(rf2.lfsr))
+        np.testing.assert_array_equal(np.asarray(rfs2.v[i]),
+                                      np.asarray(rf2.v))
+        np.testing.assert_array_equal(np.asarray(counts[i]),
+                                      np.asarray(c2))
+
+
+def test_train_stream_batch_step_fallback_matches_window():
+    b, n, words, n_samples, t_steps = 2, 10, 2, 3, 12
+    lif, stdp, w0, trains, teach = _stream_operands(
+        b, n, words, n_samples, t_steps)
+    rfs = snn_regfile_batch(jnp.broadcast_to(w0, (b, n, words)), [7, 9])
+    rw, cw = network.train_stream_batch(rfs, trains, teach, lif, stdp)
+    rs, cs = network.train_stream_batch(rfs, trains, teach, lif, stdp,
+                                        cycle_backend="step")
+    for a, bb in [(rw.weights, rs.weights), (rw.v, rs.v),
+                  (rw.lfsr, rs.lfsr), (cw, cs)]:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+def test_train_stream_batch_interp_kernel_matches_ref():
+    b, n, words, n_samples, t_steps = 2, 10, 2, 2, 9
+    lif, stdp, w0, trains, teach = _stream_operands(
+        b, n, words, n_samples, t_steps)
+    rfs = snn_regfile_batch(jnp.broadcast_to(w0, (b, n, words)), [3, 5])
+    rr, cr = network.train_stream_batch(rfs, trains, teach, lif, stdp)
+    ri, ci = network.train_stream_batch(rfs, trains, teach, lif, stdp,
+                                        kernel_backend="interp",
+                                        window_chunk=4)
+    for a, bb in [(rr.weights, ri.weights), (rr.v, ri.v),
+                  (rr.lfsr, ri.lfsr), (cr, ci)]:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+def test_parallel_train_mode_deterministic_and_shaped():
+    imgs, labels = make_digits(80, seed=13)
+    cfg = SNNTrainConfig(n_neurons=20, epochs=1, n_steps=16,
+                         train_mode="parallel")
+    m1 = train(cfg, imgs, labels)
+    m2 = train(cfg, imgs, labels)
+    assert m1.weights.shape == (20, cfg.words)
+    np.testing.assert_array_equal(np.asarray(m1.neuron_class),
+                                  np.tile(np.arange(10), 2))
+    np.testing.assert_array_equal(np.asarray(m1.weights),
+                                  np.asarray(m2.weights))
+
+
+def test_parallel_blocks_decorrelated_by_keyed_seeds():
+    """Parallel blocks share data + params; only keyed LFSR seeds differ,
+    so their learned rows must differ."""
+    imgs, labels = make_digits(80, seed=17)
+    cfg = SNNTrainConfig(n_neurons=20, epochs=1, n_steps=16,
+                         train_mode="parallel")
+    m = train(cfg, imgs, labels)
+    w = np.asarray(m.weights)
+    assert (w[:10] != w[10:]).any()
+
+
+def test_train_block_key_is_used_and_reproducible():
+    """_train_block must thread its PRNG key into the regfile seeding:
+    same key -> identical weights, different key -> different weights."""
+    imgs, labels = make_digits(60, seed=19)
+    cfg = SNNTrainConfig(n_neurons=10, epochs=1, n_steps=16)
+    sp = poisson_encode_batch(jax.random.key(0),
+                              jnp.asarray(imgs, jnp.float32), cfg.n_steps)
+    labels_j = jnp.asarray(labels, jnp.int32)
+    wa = _train_block(cfg, jax.random.key(1), sp, labels_j, 0)
+    wb = _train_block(cfg, jax.random.key(1), sp, labels_j, 0)
+    wc = _train_block(cfg, jax.random.key(2), sp, labels_j, 0)
+    np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
+    assert (np.asarray(wa) != np.asarray(wc)).any()

@@ -1,0 +1,84 @@
+"""Neuron-axis mesh sharding of the window engine.
+
+The multi-device case needs ``--xla_force_host_platform_device_count``
+set before jax initializes, so it runs in a subprocess; the in-process
+test exercises the same shard_map path on whatever mesh this process
+has (1 CPU device under plain pytest).
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lfsr
+from repro.distributed import snn_mesh
+from repro.kernels import ops
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_sharded_ops_match_unsharded_on_local_mesh():
+    mesh = snn_mesh.snn_mesh()
+    rng = np.random.default_rng(4)
+    n, w, t, b = 24, 5, 9, 3
+    weights = jnp.asarray(rng.integers(0, 2**32, (n, w), dtype=np.uint32))
+    trains = jnp.asarray(
+        rng.integers(0, 2**32, (b, t, w), dtype=np.uint32))
+    v = jnp.zeros((n,), jnp.int32)
+    teach = jnp.asarray(rng.integers(-50, 50, (n,), dtype=np.int32))
+    st = lfsr.seed(7, n * w).reshape(n, w)
+    kw = dict(threshold=60, leak=4, w_exp=64, gain=4, n_syn=w * 32,
+              ltp_prob=200)
+
+    got = snn_mesh.sharded_infer_window_batch(
+        weights, trains, threshold=60, leak=4, mesh=mesh)
+    want = ops.infer_window_batch(weights, trains, threshold=60, leak=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    for train in (True, False):
+        got = snn_mesh.sharded_fused_snn_window(
+            weights, trains[0], v, st, teach, train=train, mesh=mesh,
+            **kw)
+        want = ops.fused_snn_window(weights, trains[0], v, st, teach,
+                                    train=train, **kw)
+        for g, r in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_sharded_handles_non_divisible_neuron_axis():
+    """n not a multiple of the mesh size pads + slices transparently."""
+    mesh = snn_mesh.snn_mesh()
+    d = mesh.shape["neuron"]
+    n, w = d * 4 + 3, 3
+    rng = np.random.default_rng(8)
+    weights = jnp.asarray(rng.integers(0, 2**32, (n, w), dtype=np.uint32))
+    trains = jnp.asarray(rng.integers(0, 2**32, (2, 6, w),
+                                      dtype=np.uint32))
+    got = snn_mesh.sharded_infer_window_batch(
+        weights, trains, threshold=20, leak=2, mesh=mesh)
+    want = ops.infer_window_batch(weights, trains, threshold=20, leak=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.slow
+def test_multi_device_host_mesh_subprocess():
+    """Sharded == unsharded on a real 8-device CPU mesh (fresh jax)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+    env["PYTHONPATH"] = (str(REPO / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.distributed.snn_mesh", "--check",
+         "--devices", "8", "--neurons", "64", "--words", "5",
+         "--steps", "8", "--batch", "2"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "sharded(8 devices) == single-device" in proc.stdout
