@@ -11,7 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 
 Usage::
 
-  python benchmarks/run.py [module] [--json[=PATH]]
+  python benchmarks/run.py [module] [--json[=PATH]] [--gate]
 
 ``--json`` additionally writes every emitted row as machine-readable
 JSON (name -> us_per_call + parsed derived metrics such as bytes_ratio
@@ -19,6 +19,20 @@ and time_ratio) so the perf trajectory is tracked across PRs.  PATH
 defaults to ``BENCH_kernels.json``; the ``=`` form keeps the module
 filter unambiguous (``run.py --json kernels_bench`` filters, it does
 not name the output file).
+
+``--gate`` turns the run into a CI perf gate: before overwriting PATH,
+the committed rows there become the baseline, and any shared row whose
+``time_ratio`` or ``bytes_ratio`` drops by more than ``GATE_THRESHOLD``
+(25%) fails the run with exit code 1.  The ratios are relative
+(sequential baseline vs fused/batched/sharded path, measured in the
+same process), so they gate the *structural* speedups rather than raw
+host wall-clock; because single-run wall clock still swings several-x
+on CI hosts, ``time_ratio`` only fails when a clearly-structural
+baseline row (>= ``GATE_TIME_BASE_MIN``) collapses below
+``GATE_TIME_FLOOR`` — the speedup is gone, not merely noisy.  ``--gate``
+without ``--json``, or without a loadable committed baseline, is a
+configuration error (exit 2), never a silent pass.  Without ``--gate``,
+regressions are printed as warnings only.
 """
 
 from __future__ import annotations
@@ -26,6 +40,53 @@ from __future__ import annotations
 import json
 import sys
 import time
+
+GATE_THRESHOLD = 0.25          # fail on >25% drop of a gated ratio
+GATE_TIME_BASE_MIN = 4.0       # only clearly-structural rows time-gate
+GATE_TIME_FLOOR = 1.25         # ...and only when the speedup is gone
+_GATED_METRICS = ("time_ratio", "bytes_ratio")
+
+
+def load_baseline(path: str) -> dict | None:
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return None
+
+
+def check_regressions(baseline: dict, rows: dict,
+                      threshold: float = GATE_THRESHOLD) -> list[str]:
+    """Rows whose gated ratios regressed past the threshold.
+
+    Only rows AND metrics present on both sides are compared — new
+    rows, removed rows and rows without ratios (e.g. interp timing)
+    never gate.  ``bytes_ratio`` is analytic and always gates on the
+    relative threshold.  ``time_ratio`` is single-run CPU wall clock
+    and swings several-x between runs of identical code (the committed
+    baseline's own history shows 1.1 <-> 1.55 and 2.3 <-> 12.5 swings),
+    so it fails only when BOTH hold: the baseline row was a clearly
+    structural speedup (>= GATE_TIME_BASE_MIN) and the new ratio fell
+    below GATE_TIME_FLOOR — i.e. the batched/fused path degraded to
+    ~sequential speed, not merely a noisy-but-still-fast run.
+    """
+    msgs = []
+    for name in sorted(set(baseline) & set(rows)):
+        old, new = baseline[name], rows[name]
+        for metric in _GATED_METRICS:
+            ov, nv = old.get(metric), new.get(metric)
+            if not (isinstance(ov, (int, float))
+                    and isinstance(nv, (int, float))):
+                continue
+            if metric == "time_ratio" and (
+                    ov < GATE_TIME_BASE_MIN or nv >= GATE_TIME_FLOOR):
+                continue
+            if ov > 0 and nv < ov * (1.0 - threshold):
+                msgs.append(
+                    f"{name}: {metric} {ov:.2f} -> {nv:.2f} "
+                    f"({(nv / ov - 1.0) * 100:+.0f}%, gate is "
+                    f"-{threshold * 100:.0f}%)")
+    return msgs
 
 # NOTE: the sharded-window benchmark row needs a multi-device mesh;
 # kernels_bench runs it in a subprocess with
@@ -41,6 +102,7 @@ def main(argv: list[str] | None = None) -> None:
 
     args = list(sys.argv[1:] if argv is None else argv)
     json_path = None
+    gate = False
     for a in list(args):
         if a == "--json":
             json_path = "BENCH_kernels.json"
@@ -48,6 +110,14 @@ def main(argv: list[str] | None = None) -> None:
         elif a.startswith("--json="):
             json_path = a.split("=", 1)[1] or "BENCH_kernels.json"
             args.remove(a)
+        elif a == "--gate":
+            gate = True
+            args.remove(a)
+
+    if gate and json_path is None:
+        print("# --gate requires --json (nothing to compare)",
+              flush=True)
+        sys.exit(2)
 
     mods = [("table1_accuracy", table1_accuracy),
             ("fig5_neurons", fig5_neurons),
@@ -67,9 +137,28 @@ def main(argv: list[str] | None = None) -> None:
     if json_path is not None:
         rows = {rec["name"]: {k: v for k, v in rec.items() if k != "name"}
                 for rec in common.RECORDS}
+        baseline = load_baseline(json_path)
         with open(json_path, "w") as fh:
             json.dump(rows, fh, indent=2, sort_keys=True)
         print(f"# wrote {len(rows)} rows to {json_path}", flush=True)
+        if baseline is None:
+            if gate:
+                print(f"# perf gate FAILED: no committed baseline at "
+                      f"{json_path} (missing or unparseable)",
+                      flush=True)
+                sys.exit(2)
+        else:
+            msgs = check_regressions(baseline, rows)
+            for m in msgs:
+                print(f"# PERF REGRESSION {m}", flush=True)
+            if msgs and gate:
+                print(f"# perf gate FAILED ({len(msgs)} regressed rows)",
+                      flush=True)
+                sys.exit(1)
+            if not msgs:
+                print(f"# perf gate OK ({len(set(baseline) & set(rows))} "
+                      f"rows within {GATE_THRESHOLD * 100:.0f}%)",
+                      flush=True)
 
 
 if __name__ == "__main__":

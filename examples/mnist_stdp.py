@@ -9,10 +9,12 @@ Run:  PYTHONPATH=src python examples/mnist_stdp.py \
           [--cycle-backend window|step] [--kernel-backend ref|interp|tpu] \
           [--train-mode active|parallel] [--window-chunk T_CHUNK]
 
-The backend/batching flags drive the same execution paths the kernel
-benchmarks measure: ``--cycle-backend window`` is the time-resident
-window kernel, ``--train-mode parallel`` the batched training grid,
-``--window-chunk`` the bounded-VMEM chunked spike streaming.
+The backend/batching flags become one frozen ``SNNEnginePlan``
+(``--cycle-backend window`` is the time-resident window kernel,
+``--train-mode parallel`` the batched training grid, ``--window-chunk``
+the bounded-VMEM chunked spike streaming), and test-set classification
+runs the plan's ``SNNEngine.infer`` verb directly — the same engine the
+trainer and the serving path dispatch through.
 """
 
 from __future__ import annotations
@@ -28,8 +30,9 @@ import numpy as np
 from repro.configs.wenquxing_snn import WENQUXING_22A
 from repro.core.encoder import poisson_encode_batch
 from repro.core.preprocess import preprocess_batch
-from repro.core.trainer import accuracy, train
+from repro.core.trainer import train
 from repro.data.digits import make_digits
+from repro.engine import SNNEngine
 
 
 def main() -> None:
@@ -79,9 +82,14 @@ def main() -> None:
     model = train(cfg, tr, labels)
     print(f"  trained in {time.time() - t0:.1f}s")
 
+    # classification = the engine's infer verb on the config's plan
+    eng = SNNEngine(cfg.plan())
     st = poisson_encode_batch(jax.random.key(99), jnp.asarray(te),
                               cfg.n_steps)
-    acc = accuracy(model, st, jnp.asarray(tlabels))
+    counts = eng.infer(model.weights, st)
+    pred = model.neuron_class[jnp.argmax(counts, axis=-1)]
+    acc = float(jnp.mean((pred == jnp.asarray(tlabels))
+                         .astype(jnp.float32)))
     print(f"test accuracy: {acc:.4f}  "
           f"(paper, real MNIST @40: 0.9191; chance: 0.10)")
 

@@ -7,6 +7,8 @@ binary stochastic STDP, rate-Poisson encoding, {10, 20, 40} LIF neurons.
 
 from __future__ import annotations
 
+import dataclasses
+
 from repro.core.trainer import SNNTrainConfig
 
 WENQUXING_22A = SNNTrainConfig(
@@ -26,7 +28,6 @@ WENQUXING_22A = SNNTrainConfig(
 )
 
 VARIANTS = {
-    n: WENQUXING_22A.__class__(**{**WENQUXING_22A.__dict__,
-                                  "n_neurons": n})
+    n: dataclasses.replace(WENQUXING_22A, n_neurons=n)
     for n in (10, 20, 40)
 }

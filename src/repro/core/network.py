@@ -1,40 +1,24 @@
-"""SNN network execution over the presentation window (paper §3.1 network).
+"""SNN network execution over the presentation window (paper §3.1).
 
-The paper's network is a single fully-connected layer of LIF neurons fed
-by Poisson-encoded input spikes; training is online (weights change every
-cycle), inference counts output spikes over the presentation window.
+.. deprecated::
+    This module is a thin compatibility shim over the unified engine in
+    :mod:`repro.engine` — build an
+    :class:`~repro.engine.SNNEnginePlan` and speak the engine's three
+    verbs (``infer`` / ``train`` / ``train_batch``) instead of threading
+    ``cycle_backend``/``kernel_backend``/``window_chunk`` kwargs through
+    these functions.  The wrappers stay byte-identical with the
+    pre-engine implementations (see ``repro.engine`` for the migration
+    table), so existing callers keep working unchanged.
 
-Two execution strategies:
-
-``cycle_backend="window"`` (default)
-    One ``ops.fused_snn_window`` launch covers the whole T-cycle window:
-    weights, membrane and LFSR state stay resident in VMEM while the
-    (tiny) per-cycle spike words stream past — the TPU analogue of the
-    paper's claim that the coarse-grained ``snn.step`` instruction keeps
-    the SPU→NU→SU dataflow in-pipeline.  Requires concrete (non-traced)
-    LIF/STDP parameters, since they lower as kernel literals.
-
-``cycle_backend="step"``
-    The original ``lax.scan`` of per-cycle ``snn_step`` calls.  Also the
-    automatic fallback when parameters arrive as tracers (e.g. a caller
-    jits this module with LIFParams as a runtime argument).
-
-``kernel_backend`` selects the kernel implementation for the window path
-("ref" = XLA scan oracle, "interp" = Pallas interpret, "tpu" = compiled).
-``window_chunk`` streams the spike window through VMEM in fixed-size
-slabs (kernel backends only; bit-exact with the unchunked launch), so T
-is unbounded at bounded VMEM.
-
-Batched training (``train_stream_batch``): B independent streams — one
-batched :class:`SnnRegFile` (leading stream axis on every leaf) — train
-in ONE kernel launch per presented sample via ``ops.train_window_batch``
-instead of B sequential ``train_stream`` scans.  Stream b is bit-exact
-with a sequential ``train_stream`` run from regfile b.
+The only logic that still lives here is the traced-parameter fallback:
+engine plans hold concrete Python ints, so when a caller jits one of
+these wrappers with ``LIFParams``/``STDPParams`` as runtime arguments
+(tracers), the window path cannot lower them as kernel literals and the
+wrapper drops to the original per-cycle ``lax.scan`` of ``snn_step``
+calls.
 """
 
 from __future__ import annotations
-
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -42,13 +26,12 @@ import jax.numpy as jnp
 from repro.core.lif import LIFParams
 from repro.core.rvsnn import SnnRegFile, snn_regfile, snn_step
 from repro.core.stdp import STDPParams
-from repro.kernels import ops
+from repro.engine import SNNEngine, SNNEnginePlan, SNNOutput
+from repro.engine import engine as _engine
+from repro.engine import reset_between_samples  # noqa: F401  (re-export)
 
-
-class SNNOutput(NamedTuple):
-    regfile: SnnRegFile
-    spike_counts: jnp.ndarray  # int32[n] output spikes over the window
-    fired: jnp.ndarray         # bool[T, n] raster
+__all__ = ["SNNOutput", "run_sample", "reset_between_samples",
+           "infer_batch", "train_stream", "train_stream_batch"]
 
 
 def _check_backend(cycle_backend: str) -> None:
@@ -66,21 +49,25 @@ def _static_int(x) -> int | None:
         return None
 
 
-def _window_params(lif: LIFParams, stdp: STDPParams | None):
-    """Static kernel literals for the window path, or None if traced."""
+def _make_plan(lif: LIFParams, stdp: STDPParams | None,
+               kernel_backend: str, window_chunk: int | None
+               ) -> SNNEnginePlan | None:
+    """An engine plan from (possibly traced) params, or None if traced."""
     th, lk = _static_int(lif.threshold), _static_int(lif.leak)
     if th is None or lk is None:
         return None
     if stdp is None:
-        # SU idle: the STDP literals are unused when train=False.
-        return dict(threshold=th, leak=lk, w_exp=0, gain=0, n_syn=1,
-                    ltp_prob=0, train=False)
+        return SNNEnginePlan(threshold=th, leak=lk, w_exp=None,
+                             kernel_backend=kernel_backend,
+                             t_chunk=window_chunk)
     su = tuple(_static_int(x) for x in
                (stdp.w_exp, stdp.gain, stdp.n_syn, stdp.ltp_prob))
     if any(x is None for x in su):
         return None
-    return dict(threshold=th, leak=lk, w_exp=su[0], gain=su[1],
-                n_syn=su[2], ltp_prob=su[3], train=True)
+    return SNNEnginePlan(threshold=th, leak=lk, w_exp=su[0], gain=su[1],
+                         n_syn=su[2], ltp_prob=su[3],
+                         kernel_backend=kernel_backend,
+                         t_chunk=window_chunk)
 
 
 def run_sample(
@@ -96,19 +83,10 @@ def run_sample(
 ) -> SNNOutput:
     """Present one sample for T cycles.  stdp=None -> inference."""
     _check_backend(cycle_backend)
-    params = (_window_params(lif, stdp)
-              if cycle_backend == "window" else None)
-    if params is not None:
-        teach_arr = (jnp.zeros_like(rf.v) if teach is None
-                     else teach.astype(jnp.int32))
-        w2, v2, fired, lf2 = ops.fused_snn_window(
-            rf.weights, spike_train, rf.v, rf.lfsr, teach_arr,
-            backend=kernel_backend, t_chunk=window_chunk, **params)
-        rf_out = rf._replace(
-            weights=w2, v=v2, lfsr=lf2,
-            spike=spike_train[-1].astype(jnp.uint32))
-        counts = jnp.sum(fired.astype(jnp.int32), axis=0)
-        return SNNOutput(rf_out, counts, fired)
+    plan = (_make_plan(lif, stdp, kernel_backend, window_chunk)
+            if cycle_backend == "window" else None)
+    if plan is not None:
+        return SNNEngine(plan).train(rf, spike_train, teach)
 
     def body(carry: SnnRegFile, words: jnp.ndarray):
         carry, fired = snn_step(carry, words, lif, stdp, teach)
@@ -117,15 +95,6 @@ def run_sample(
     rf_out, fired = jax.lax.scan(body, rf, spike_train)
     counts = jnp.sum(fired.astype(jnp.int32), axis=0)
     return SNNOutput(rf_out, counts, fired)
-
-
-def reset_between_samples(rf: SnnRegFile) -> SnnRegFile:
-    """Clear membrane + spike registers, keep weights and LFSR (paper
-    resets neuron state between digit presentations)."""
-    return rf._replace(
-        v=jnp.zeros_like(rf.v),
-        spike=jnp.zeros_like(rf.spike),
-    )
 
 
 def infer_batch(
@@ -139,20 +108,15 @@ def infer_batch(
 ) -> jnp.ndarray:
     """Spike counts int32[B, n] for a batch (weights frozen).
 
-    The window path serves all B samples from ONE kernel launch with a
-    batch grid dimension (weights fetched once per neuron block, reused
-    across the batch) — the serving-throughput path.  The step path
-    vmaps B independent per-cycle scans.
+    Shim over :meth:`SNNEngine.infer`: the window path serves all B
+    samples from ONE kernel launch; the step path (and the traced-lif
+    fallback) vmaps B per-cycle scans.
     """
     _check_backend(cycle_backend)
-    params = (_window_params(lif, None)
-              if cycle_backend == "window" else None)
-    if params is not None:
-        return ops.infer_window_batch(weights, spike_trains,
-                                      threshold=params["threshold"],
-                                      leak=params["leak"],
-                                      t_chunk=window_chunk,
-                                      backend=kernel_backend)
+    plan = (_make_plan(lif, None, kernel_backend, window_chunk)
+            if cycle_backend == "window" else None)
+    if plan is not None:
+        return SNNEngine(plan).infer(weights, spike_trains)
     rf0 = snn_regfile(weights)
 
     def one(train):
@@ -175,8 +139,15 @@ def train_stream(
 ) -> tuple[SnnRegFile, jnp.ndarray]:
     """Online STDP over a stream of samples (sequential, as in hardware).
 
-    Returns (rf', spike_counts int32[N, n]).
+    Shim over :func:`repro.engine.train_stream`.  Returns
+    (rf', spike_counts int32[N, n]).
     """
+    _check_backend(cycle_backend)
+    plan = (_make_plan(lif, stdp, kernel_backend, window_chunk)
+            if cycle_backend == "window" else None)
+    if plan is not None:
+        return _engine.train_stream(SNNEngine(plan), rf, spike_trains,
+                                    teach)
 
     def body(carry: SnnRegFile, inp):
         train, tch = inp
@@ -203,41 +174,25 @@ def train_stream_batch(
 ) -> tuple[SnnRegFile, jnp.ndarray]:
     """Online STDP over B independent streams, batched per launch.
 
-    Each presented sample is ONE ``ops.train_window_batch`` launch
-    covering all B streams (per-stream weights/v/LFSR regfiles), instead
-    of B sequential :func:`train_stream` scans — the batched training
-    grid.  Stream b is bit-exact (incl. its LFSR sequence) with
-    ``train_stream(rf_b, spike_trains[b], teach[b], ...)``.
-
-    LIF/STDP params are shared across streams (they lower as kernel
-    literals).  Falls back to a vmap of per-cycle scans when params
-    arrive traced or ``cycle_backend="step"``.
+    Shim over :func:`repro.engine.train_stream_batch` (one
+    ``train_window_batch`` launch per presented sample).  Stream b is
+    bit-exact (incl. its LFSR sequence) with
+    ``train_stream(rf_b, spike_trains[b], teach[b], ...)``.  Falls back
+    to a vmap of per-cycle scans when params arrive traced or
+    ``cycle_backend="step"``.
 
     Returns (rfs', spike_counts int32[B, N, n]).
     """
     _check_backend(cycle_backend)
-    params = (_window_params(lif, stdp)
-              if cycle_backend == "window" else None)
+    plan = (_make_plan(lif, stdp, kernel_backend, window_chunk)
+            if cycle_backend == "window" else None)
+    if plan is not None:
+        return _engine.train_stream_batch(SNNEngine(plan), rfs,
+                                          spike_trains, teach)
+
     # scan over the sample axis: [B, N, ...] -> [N, B, ...]
     trains_t = jnp.swapaxes(spike_trains, 0, 1)
     teach_t = jnp.swapaxes(teach, 0, 1)
-
-    if params is not None:
-        params = {k: v for k, v in params.items() if k != "train"}
-
-        def body(carry: SnnRegFile, inp):
-            trains, tch = inp
-            w2, v2, fired, lf2 = ops.train_window_batch(
-                carry.weights, trains, jnp.zeros_like(carry.v),
-                carry.lfsr, tch.astype(jnp.int32),
-                backend=kernel_backend, t_chunk=window_chunk, **params)
-            carry = carry._replace(
-                weights=w2, v=v2, lfsr=lf2,
-                spike=trains[:, -1].astype(jnp.uint32))
-            return carry, jnp.sum(fired.astype(jnp.int32), axis=1)
-
-        rfs_out, counts = jax.lax.scan(body, rfs, (trains_t, teach_t))
-        return rfs_out, jnp.swapaxes(counts, 0, 1)
 
     def body(carry: SnnRegFile, inp):
         trains, tch = inp

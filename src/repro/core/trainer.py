@@ -10,12 +10,18 @@ labels; repeat until the target population size.  Classification is by
 the class of the maximally-firing neuron across all blocks.
 
 ``train_mode="parallel"`` instead trains ALL blocks concurrently on the
-full training set — one ``network.train_stream_batch`` launch per
-presented sample covers every block (per-block weights/v/LFSR regfiles,
+full training set — one ``engine.train_batch`` launch per presented
+sample covers every block (per-block weights/v/LFSR regfiles,
 decorrelated by per-block LFSR seeds) — trading the active-learning
-curriculum for a B-way batched training grid.  STDP meta-parameters are
-kernel literals shared across the batch, so every block uses the base
-``ltp_prob``.
+curriculum for a B-way batched training grid.  ``ltp_prob`` rides along
+as a per-stream SMEM scalar operand, so block 0 trains at the base
+``ltp_prob`` while blocks >= 1 keep the faster ``ltp_prob_active``
+schedule, exactly as in active mode.
+
+Execution (kernel path, backend, chunking, placement) is owned by the
+unified engine: ``SNNTrainConfig.plan()`` builds the
+:class:`~repro.engine.SNNEnginePlan` and everything below drives
+:class:`~repro.engine.SNNEngine` verbs.
 """
 
 from __future__ import annotations
@@ -27,12 +33,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import network
 from repro.core.bitpack import n_words
 from repro.core.encoder import poisson_encode_batch
 from repro.core.lif import LIFParams, lif_params
 from repro.core.rvsnn import snn_regfile, snn_regfile_batch
 from repro.core.stdp import STDPParams, init_weights, stdp_params
+from repro.engine import SNNEngine, plan_from_config
+from repro.engine import engine as _engine
 
 
 @dataclass(frozen=True)
@@ -75,6 +82,10 @@ class SNNTrainConfig:
         lp = self.ltp_prob if block_idx == 0 else self.ltp_prob_active
         return stdp_params(self.n_inputs, self.w_exp, self.gain, lp)
 
+    def plan(self, block_idx: int = 0, mesh=None):
+        """The engine execution plan this config describes."""
+        return plan_from_config(self, block_idx, mesh)
+
 
 @dataclass
 class SNNModel:
@@ -107,13 +118,10 @@ def _train_block(cfg: SNNTrainConfig, key: jax.Array,
     w0 = init_weights(cfg.n_classes, cfg.words, dense=True)
     rf = snn_regfile(w0, seed=_regfile_seed(key))
     teach = _teacher(labels, cfg)
-    # LIF/STDP params are closed over (not jit arguments) so they stay
-    # concrete at trace time and lower as window-kernel literals.
-    step = jax.jit(functools.partial(
-        network.train_stream, lif=cfg.lif(), stdp=cfg.stdp(block_idx),
-        cycle_backend=cfg.cycle_backend,
-        kernel_backend=cfg.kernel_backend,
-        window_chunk=cfg.window_chunk))
+    # The plan's params are plain ints closed over via the engine, so
+    # they stay concrete at trace time and lower as kernel literals.
+    eng = SNNEngine(cfg.plan(block_idx))
+    step = jax.jit(functools.partial(_engine.train_stream, eng))
     for _ in range(cfg.epochs):
         rf, _ = step(rf, spike_trains, teach)
     return rf.weights
@@ -124,10 +132,13 @@ def _train_blocks_parallel(cfg: SNNTrainConfig, key: jax.Array,
                            labels: jnp.ndarray) -> jnp.ndarray:
     """Train all blocks concurrently on the full set (batched grid).
 
-    Every presented sample is one ``train_window_batch`` launch covering
-    the B = n_blocks per-block regfiles; blocks differ only by their
-    keyed LFSR seeds (stochastic STDP decorrelates them).  Returns
-    packed weights uint32[n_neurons, words].
+    Every presented sample is one ``engine.train_batch`` launch covering
+    the B = n_blocks per-block regfiles; blocks differ by their keyed
+    LFSR seeds AND their LTP schedule — ``ltp_prob`` is a per-stream
+    SMEM scalar operand, so block 0 trains at the base ``ltp_prob`` and
+    blocks >= 1 at ``ltp_prob_active``, matching active mode's
+    ``cfg.stdp(block_idx)`` schedule.  Returns packed weights
+    uint32[n_neurons, words].
     """
     b = cfg.n_blocks
     w0 = jnp.broadcast_to(
@@ -143,11 +154,11 @@ def _train_blocks_parallel(cfg: SNNTrainConfig, key: jax.Array,
     teach = _teacher(labels, cfg)
     teach_b = jnp.broadcast_to(teach, (b,) + teach.shape)
     trains_b = jnp.broadcast_to(spike_trains, (b,) + spike_trains.shape)
-    step = jax.jit(functools.partial(
-        network.train_stream_batch, lif=cfg.lif(), stdp=cfg.stdp(0),
-        cycle_backend=cfg.cycle_backend,
-        kernel_backend=cfg.kernel_backend,
-        window_chunk=cfg.window_chunk))
+    lp = jnp.asarray([cfg.ltp_prob if i == 0 else cfg.ltp_prob_active
+                      for i in range(b)], jnp.int32)
+    eng = SNNEngine(cfg.plan(0))
+    step = jax.jit(functools.partial(_engine.train_stream_batch, eng,
+                                     ltp_prob=lp))
     for _ in range(cfg.epochs):
         rfs, _ = step(rfs, trains_b, teach_b)
     return rfs.weights.reshape(b * cfg.n_classes, cfg.words)
@@ -155,11 +166,8 @@ def _train_blocks_parallel(cfg: SNNTrainConfig, key: jax.Array,
 
 def classify(model: SNNModel, spike_trains: jnp.ndarray) -> jnp.ndarray:
     """Predicted class int32[B]: class of the maximally-firing neuron."""
-    counts = network.infer_batch(
-        model.weights, spike_trains, model.cfg.lif(),
-        cycle_backend=model.cfg.cycle_backend,
-        kernel_backend=model.cfg.kernel_backend,
-        window_chunk=model.cfg.window_chunk)
+    counts = SNNEngine(model.cfg.plan()).infer(model.weights,
+                                               spike_trains)
     best = jnp.argmax(counts, axis=-1)
     return model.neuron_class[best]
 

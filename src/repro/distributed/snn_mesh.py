@@ -1,5 +1,12 @@
 """Neuron-axis mesh sharding of the SNN window engine.
 
+These are the low-level shard_map wrappers behind the engine's plan
+placement: build an ``SNNEnginePlan(mesh=...)`` and
+``repro.engine.SNNEngine`` dispatches its verbs here — that is the
+public API.  The functions remain callable directly (the ``--check``/
+``--bench`` CLI and older call sites use them), with unchanged
+signatures and bit-identical outputs.
+
 The window kernels grid over neuron blocks independently — every neuron
 row owns its weights, membrane and LFSR lanes, and the (small) packed
 spike window is shared read-only.  That makes the n axis trivially
@@ -63,12 +70,13 @@ def _specs(mesh: Mesh, *names_tuples):
     return tuple(logical_spec(names, rules, mesh) for names in names_tuples)
 
 
-def _pad_rows(x: jnp.ndarray, mult: int, fill=0) -> jnp.ndarray:
-    pad = (-x.shape[0]) % mult
+def _pad_rows(x: jnp.ndarray, mult: int, fill=0, axis: int = 0
+              ) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
     if pad == 0:
         return x
     widths = [(0, 0)] * x.ndim
-    widths[0] = (0, pad)
+    widths[axis] = (0, pad)
     return jnp.pad(x, widths, constant_values=fill)
 
 
@@ -129,6 +137,45 @@ def sharded_fused_snn_window(weights, spike_train, v, lfsr_state, teach, *,
         out_specs=(row, vec, ras, row), check_rep=False)
     w2, v2, fired, s2 = fn(wp, spike_train, vp, sp, tp)
     return w2[:n], v2[:n], fired[:, :n], s2[:n]
+
+
+def sharded_train_window_batch(weights, spike_trains, v, lfsr_state,
+                               teach, *, threshold: int, leak: int,
+                               w_exp: int, gain: int, n_syn: int,
+                               ltp_prob=1023, t_chunk: int | None = None,
+                               backend: str = "ref",
+                               mesh: Mesh | None = None):
+    """:func:`ops.train_window_batch` over a neuron-sharded mesh.
+
+    weights/lfsr u32[B, n, w], v/teach i32[B, n] shard on n (every
+    stream's rows travel with their LFSR lanes); the spike windows
+    u32[B, T, w] and the per-stream ``ltp_prob`` (int or i32[B])
+    replicate.  Bit-exact with the single-device op.
+    Returns (weights', v', fired bool[B, T, n], lfsr').
+    """
+    mesh = snn_mesh() if mesh is None else mesh
+    d = mesh.shape[_AXIS]
+    b, n, _ = weights.shape
+    wp = _pad_rows(weights, d, axis=1)
+    vp = _pad_rows(v, d, axis=1)
+    tp = _pad_rows(teach, d, axis=1)
+    sp = _pad_rows(lfsr_state, d, fill=1, axis=1)
+    lp = jnp.broadcast_to(jnp.asarray(ltp_prob, jnp.int32), (b,))
+    row3, vecb, rep3, rep1, ras3 = _specs(
+        mesh, (None, "neurons", "syn_words"), (None, "neurons"),
+        (None, None, "syn_words"), (None,), (None, None, "neurons"))
+
+    def call(w, s, vv, st, tc, lp_):
+        return ops.train_window_batch(
+            w, s, vv, st, tc, threshold=threshold, leak=leak,
+            w_exp=w_exp, gain=gain, n_syn=n_syn, ltp_prob=lp_,
+            t_chunk=t_chunk, backend=backend)
+
+    fn = shard_map(call, mesh=mesh,
+                   in_specs=(row3, rep3, vecb, row3, vecb, rep1),
+                   out_specs=(row3, vecb, ras3, row3), check_rep=False)
+    w2, v2, fired, s2 = fn(wp, spike_trains, vp, sp, tp, lp)
+    return w2[:, :n], v2[:, :n], fired[:, :, :n], s2[:, :n]
 
 
 def _check(args) -> int:

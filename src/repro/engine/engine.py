@@ -1,0 +1,243 @@
+"""The unified SNN engine: three verbs over one execution plan.
+
+:class:`SNNEngine` is the single object that owns kernel-path and
+placement decisions for the SNN stack.  Callers build one
+:class:`~repro.engine.plan.SNNEnginePlan` and then speak three verbs:
+
+``infer(weights, windows)``
+    Spike counts i32[B, n] for B presentation windows, weights frozen,
+    membrane reset per sample — the serving path.  One
+    ``infer_window_batch`` launch (sharded over the plan's neuron mesh
+    when present), or a vmap of per-cycle scans on the step path.
+
+``train(rf, window, teach)``
+    Present one window to one register file with online STDP (SU idle
+    for inference-only plans).  One ``fused_snn_window`` launch, or a
+    per-cycle ``snn_step`` scan on the step path.
+
+``train_batch(rfs, windows, teach)``
+    B independent training streams in ONE launch (the batched training
+    grid), with optional per-stream ``ltp_prob`` — the SMEM scalar
+    operand keeps each stream's active-learning schedule.
+
+The module-level :func:`train_stream` / :func:`train_stream_batch`
+helpers compose the verbs over a sample stream (reset between samples,
+scan over the sample axis) — they are what ``repro.core.network`` and
+``repro.core.trainer`` now shim to.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rvsnn import SnnRegFile, snn_regfile, snn_step
+from repro.core.stdp import STDPParams
+from repro.engine.plan import SNNEnginePlan
+from repro.kernels import ops
+
+
+class SNNOutput(NamedTuple):
+    """One presented window: updated regfile + spike statistics."""
+    regfile: SnnRegFile
+    spike_counts: jnp.ndarray  # int32[n] output spikes over the window
+    fired: jnp.ndarray         # bool[T, n] raster
+
+
+def reset_between_samples(rf: SnnRegFile) -> SnnRegFile:
+    """Clear membrane + spike registers, keep weights and LFSR (paper
+    resets neuron state between digit presentations)."""
+    return rf._replace(
+        v=jnp.zeros_like(rf.v),
+        spike=jnp.zeros_like(rf.spike),
+    )
+
+
+def _teach_arr(teach, v) -> jnp.ndarray:
+    return (jnp.zeros_like(v) if teach is None
+            else teach.astype(jnp.int32))
+
+
+class SNNEngine:
+    """Dispatches the three verbs according to one frozen plan."""
+
+    def __init__(self, plan: SNNEnginePlan):
+        self.plan = plan
+
+    def __repr__(self) -> str:
+        return f"SNNEngine({self.plan!r})"
+
+    # --- infer -----------------------------------------------------------
+
+    def infer(self, weights: jnp.ndarray,
+              windows: jnp.ndarray) -> jnp.ndarray:
+        """Spike counts int32[B, n] for windows uint32[B, T, w]."""
+        p = self.plan
+        if p.cycle_backend == "window":
+            if p.mesh is not None:
+                from repro.distributed import snn_mesh
+                return snn_mesh.sharded_infer_window_batch(
+                    weights, windows, threshold=p.threshold, leak=p.leak,
+                    t_chunk=p.t_chunk, backend=p.kernel_backend,
+                    mesh=p.mesh)
+            return ops.infer_window_batch(
+                weights, windows, threshold=p.threshold, leak=p.leak,
+                t_chunk=p.t_chunk, backend=p.kernel_backend)
+
+        lif = p.lif()
+        rf0 = snn_regfile(weights)
+
+        def one(window):
+            def body(carry, words):
+                carry, fired = snn_step(carry, words, lif, None)
+                return carry, fired
+
+            _, fired = jax.lax.scan(body, rf0, window)
+            return jnp.sum(fired.astype(jnp.int32), axis=0)
+
+        return jax.vmap(one)(windows)
+
+    # --- train -----------------------------------------------------------
+
+    def train(self, rf: SnnRegFile, window: jnp.ndarray,
+              teach: jnp.ndarray | None = None) -> SNNOutput:
+        """Present one uint32[T, w] window to one regfile.
+
+        Online STDP when the plan learns (``w_exp`` set); SU idle
+        otherwise.  Returns :class:`SNNOutput`.
+        """
+        p = self.plan
+        if p.cycle_backend == "window":
+            teach_arr = _teach_arr(teach, rf.v)
+            kwargs = p.window_kwargs()
+            if p.mesh is not None:
+                from repro.distributed import snn_mesh
+                w2, v2, fired, lf2 = snn_mesh.sharded_fused_snn_window(
+                    rf.weights, window, rf.v, rf.lfsr, teach_arr,
+                    t_chunk=p.t_chunk, backend=p.kernel_backend,
+                    mesh=p.mesh, **kwargs)
+            else:
+                w2, v2, fired, lf2 = ops.fused_snn_window(
+                    rf.weights, window, rf.v, rf.lfsr, teach_arr,
+                    t_chunk=p.t_chunk, backend=p.kernel_backend,
+                    **kwargs)
+            rf_out = rf._replace(
+                weights=w2, v=v2, lfsr=lf2,
+                spike=window[-1].astype(jnp.uint32))
+            counts = jnp.sum(fired.astype(jnp.int32), axis=0)
+            return SNNOutput(rf_out, counts, fired)
+
+        lif, stdp = p.lif(), p.stdp()
+
+        def body(carry: SnnRegFile, words: jnp.ndarray):
+            carry, fired = snn_step(carry, words, lif, stdp, teach)
+            return carry, fired
+
+        rf_out, fired = jax.lax.scan(body, rf, window)
+        counts = jnp.sum(fired.astype(jnp.int32), axis=0)
+        return SNNOutput(rf_out, counts, fired)
+
+    # --- train_batch -----------------------------------------------------
+
+    def train_batch(self, rfs: SnnRegFile, windows: jnp.ndarray,
+                    teach: jnp.ndarray, *, ltp_prob=None
+                    ) -> tuple[SnnRegFile, jnp.ndarray, jnp.ndarray]:
+        """B independent streams, one launch: batched regfile (leading
+        stream axis), windows uint32[B, T, w], teach i32[B, n].
+
+        ``ltp_prob`` overrides the plan's shared value with a per-stream
+        i32[B] vector (active-learning schedules per block).  Returns
+        (rfs', spike_counts i32[B, n], fired bool[B, T, n]); stream b is
+        bit-exact with a :meth:`train` call on regfile b.
+        """
+        p = self.plan
+        if not p.learn:
+            raise ValueError("train_batch needs a learning plan "
+                             "(w_exp is None)")
+        lp = p.ltp_prob if ltp_prob is None else ltp_prob
+        if p.cycle_backend == "window":
+            kwargs = {k: v for k, v in p.window_kwargs().items()
+                      if k not in ("train", "ltp_prob")}
+            if p.mesh is not None:
+                from repro.distributed import snn_mesh
+                w2, v2, fired, lf2 = snn_mesh.sharded_train_window_batch(
+                    rfs.weights, windows, rfs.v, rfs.lfsr,
+                    teach.astype(jnp.int32), ltp_prob=lp,
+                    t_chunk=p.t_chunk, backend=p.kernel_backend,
+                    mesh=p.mesh, **kwargs)
+            else:
+                w2, v2, fired, lf2 = ops.train_window_batch(
+                    rfs.weights, windows, rfs.v, rfs.lfsr,
+                    teach.astype(jnp.int32), ltp_prob=lp,
+                    t_chunk=p.t_chunk, backend=p.kernel_backend,
+                    **kwargs)
+            rfs_out = rfs._replace(
+                weights=w2, v=v2, lfsr=lf2,
+                spike=windows[:, -1].astype(jnp.uint32))
+            counts = jnp.sum(fired.astype(jnp.int32), axis=1)
+            return rfs_out, counts, fired
+
+        b = rfs.v.shape[0]
+        lif = p.lif()
+        lp_arr = jnp.broadcast_to(jnp.asarray(lp, jnp.int32), (b,))
+
+        def one(rf_b, window_b, teach_b, lp_b):
+            stdp = STDPParams(jnp.int32(p.w_exp), jnp.int32(p.gain),
+                              jnp.int32(p.n_syn), jnp.uint32(lp_b))
+
+            def body(carry, words):
+                carry, fired = snn_step(carry, words, lif, stdp, teach_b)
+                return carry, fired
+
+            return jax.lax.scan(body, rf_b, window_b)
+
+        rfs_out, fired = jax.vmap(one)(rfs, windows, teach, lp_arr)
+        counts = jnp.sum(fired.astype(jnp.int32), axis=1)
+        return rfs_out, counts, fired
+
+
+# --- stream drivers (compose the verbs over the sample axis) ---------------
+
+def train_stream(engine: SNNEngine, rf: SnnRegFile,
+                 spike_trains: jnp.ndarray, teach: jnp.ndarray
+                 ) -> tuple[SnnRegFile, jnp.ndarray]:
+    """Online STDP over a stream of samples (sequential, as in hardware).
+
+    spike_trains uint32[N, T, w], teach i32[N, n].  Neuron state resets
+    between presentations; weights and LFSR persist.  Returns
+    (rf', spike_counts i32[N, n]).
+    """
+
+    def body(carry: SnnRegFile, inp):
+        window, tch = inp
+        out = engine.train(reset_between_samples(carry), window, tch)
+        return out.regfile, out.spike_counts
+
+    return jax.lax.scan(body, rf, (spike_trains, teach))
+
+
+def train_stream_batch(engine: SNNEngine, rfs: SnnRegFile,
+                       spike_trains: jnp.ndarray, teach: jnp.ndarray,
+                       *, ltp_prob=None
+                       ) -> tuple[SnnRegFile, jnp.ndarray]:
+    """B independent sample streams, one :meth:`SNNEngine.train_batch`
+    launch per presented sample.
+
+    spike_trains uint32[B, N, T, w], teach i32[B, N, n]; ``ltp_prob``
+    optionally carries the per-stream i32[B] schedule through every
+    launch.  Returns (rfs', spike_counts i32[B, N, n]).
+    """
+    trains_t = jnp.swapaxes(spike_trains, 0, 1)
+    teach_t = jnp.swapaxes(teach, 0, 1)
+
+    def body(carry: SnnRegFile, inp):
+        windows, tch = inp
+        carry = carry._replace(v=jnp.zeros_like(carry.v))
+        rfs2, counts, _ = engine.train_batch(carry, windows, tch,
+                                             ltp_prob=ltp_prob)
+        return rfs2, counts
+
+    rfs_out, counts = jax.lax.scan(body, rfs, (trains_t, teach_t))
+    return rfs_out, jnp.swapaxes(counts, 0, 1)

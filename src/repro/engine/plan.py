@@ -1,0 +1,114 @@
+"""The frozen execution plan of the unified SNN engine.
+
+An :class:`SNNEnginePlan` owns every decision that used to be threaded
+through call sites as kwargs (``threshold``/``leak``/``ltp_prob``/
+``backend``/``t_chunk``/``mesh`` across ``ops.py``, ``network.py``,
+``trainer.py`` and ``snn_mesh.py``): LIF/STDP parameters, the kernel
+backend, the cycle path, VMEM chunking, serving batch size and the
+optional neuron-mesh placement.  Plans are frozen dataclasses of plain
+Python scalars (plus an optional :class:`jax.sharding.Mesh`), so the
+parameters stay concrete at trace time and lower as window-kernel
+literals — the engine never hits the traced-parameter fallback the
+legacy ``network.run_sample`` path needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from jax.sharding import Mesh
+
+from repro.core.lif import LIFParams, lif_params
+from repro.core.stdp import STDPParams, stdp_params
+
+_CYCLE_BACKENDS = ("window", "step")
+_KERNEL_BACKENDS = ("ref", "interp", "tpu")
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNEnginePlan:
+    """Everything the engine needs to place and dispatch SNN work.
+
+    ``w_exp=None`` marks an inference-only plan (SU idle): ``train``
+    presents windows without learning, exactly the legacy
+    ``run_sample(stdp=None)`` semantics.  ``mesh`` shard_maps the window
+    ops over a 1-D neuron mesh (window path only — the step path is a
+    plain XLA scan).
+    """
+    # --- LIF / STDP parameters (lower as kernel literals) ---------------
+    threshold: int = 192
+    leak: int = 16
+    w_exp: int | None = 128     # None => SU idle (inference-only plan)
+    gain: int = 4
+    n_syn: int = 784
+    ltp_prob: int = 16
+    # --- dispatch -------------------------------------------------------
+    cycle_backend: str = "window"    # "window" | "step"
+    kernel_backend: str = "ref"      # "ref" | "interp" | "tpu"
+    t_chunk: int | None = None       # VMEM spike-slab cycles (None = T)
+    # --- serving / placement -------------------------------------------
+    max_batch: int = 8               # serving admission cap per launch
+    mesh: Mesh | None = None         # neuron-axis placement (None = local)
+
+    def __post_init__(self):
+        if self.cycle_backend not in _CYCLE_BACKENDS:
+            raise ValueError(f"cycle_backend must be one of "
+                             f"{_CYCLE_BACKENDS}, got "
+                             f"{self.cycle_backend!r}")
+        if self.kernel_backend not in _KERNEL_BACKENDS:
+            raise ValueError(f"kernel_backend must be one of "
+                             f"{_KERNEL_BACKENDS}, got "
+                             f"{self.kernel_backend!r}")
+        if self.t_chunk is not None and self.t_chunk < 1:
+            raise ValueError(f"t_chunk must be >= 1, got {self.t_chunk}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got "
+                             f"{self.max_batch}")
+        if self.mesh is not None and self.cycle_backend != "window":
+            raise ValueError("mesh placement applies to the window "
+                             "path; use cycle_backend='window'")
+
+    # --- derived views ---------------------------------------------------
+
+    @property
+    def learn(self) -> bool:
+        """Whether the train verb runs the SU (STDP) at all."""
+        return self.w_exp is not None
+
+    def lif(self) -> LIFParams:
+        return lif_params(self.threshold, self.leak)
+
+    def stdp(self) -> STDPParams | None:
+        if not self.learn:
+            return None
+        return stdp_params(self.n_syn, self.w_exp, self.gain,
+                           self.ltp_prob)
+
+    def window_kwargs(self) -> dict:
+        """Static literals for the window kernels (ops.fused_snn_window
+        signature); inference-only plans hand the SU zeroed literals +
+        train=False, matching the legacy ``_window_params`` encoding."""
+        if not self.learn:
+            return dict(threshold=self.threshold, leak=self.leak,
+                        w_exp=0, gain=0, n_syn=1, ltp_prob=0,
+                        train=False)
+        return dict(threshold=self.threshold, leak=self.leak,
+                    w_exp=self.w_exp, gain=self.gain, n_syn=self.n_syn,
+                    ltp_prob=self.ltp_prob, train=True)
+
+
+def plan_from_config(cfg, block_idx: int = 0,
+                     mesh: Mesh | None = None) -> SNNEnginePlan:
+    """Build a plan from an ``SNNTrainConfig``-shaped object.
+
+    ``block_idx`` selects the active-learning LTP schedule exactly as
+    ``SNNTrainConfig.stdp`` does (block 0 trains at ``ltp_prob``, later
+    error-driven blocks at ``ltp_prob_active``).
+    """
+    lp = cfg.ltp_prob if block_idx == 0 else cfg.ltp_prob_active
+    return SNNEnginePlan(
+        threshold=cfg.threshold, leak=cfg.leak, w_exp=cfg.w_exp,
+        gain=cfg.gain, n_syn=cfg.n_inputs, ltp_prob=lp,
+        cycle_backend=cfg.cycle_backend,
+        kernel_backend=cfg.kernel_backend,
+        t_chunk=cfg.window_chunk, mesh=mesh)

@@ -181,19 +181,21 @@ def fused_snn_window(weights, spike_train, v, lfsr_state, teach, *,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "threshold", "leak", "w_exp", "gain", "n_syn", "ltp_prob", "t_chunk",
-    "backend"))
+    "threshold", "leak", "w_exp", "gain", "n_syn", "t_chunk", "backend"))
 def train_window_batch(weights, spike_trains, v, lfsr_state, teach, *,
                        threshold: int, leak: int, w_exp: int, gain: int,
-                       n_syn: int, ltp_prob: int = 1023,
+                       n_syn: int, ltp_prob=1023,
                        t_chunk: int | None = None, backend: str = "ref"):
     """Batched training grid: B independent streams per launch.
 
     weights/lfsr u32[B, n, w], spike_trains u32[B, T, w], v i32[B, n],
     teach i32[B, n] — per-stream regfiles, one grid ordered
-    (neuron-block major, batch, time-chunk minor).  Bit-exact with B
-    sequential :func:`fused_snn_window` runs, including each stream's
-    LFSR sequence.  Returns (weights', v', fired bool[B, T, n], lfsr').
+    (neuron-block major, batch, time-chunk minor).  ``ltp_prob`` is a
+    shared int or a per-stream i32[B] vector (an SMEM scalar operand of
+    the kernel, so each stream can keep its own active-learning
+    schedule).  Bit-exact with B sequential :func:`fused_snn_window`
+    runs, including each stream's LFSR sequence.
+    Returns (weights', v', fired bool[B, T, n], lfsr').
     """
     if backend == "ref":
         return _ref.train_window_batch_ref(

@@ -82,21 +82,24 @@ def fused_snn_window_ref(weights, spike_train, v, lfsr_state, teach,
 
 def train_window_batch_ref(weights, spike_trains, v, lfsr_state, teach,
                            threshold: int, leak: int, w_exp: int,
-                           gain: int, n_syn: int, ltp_prob: int):
+                           gain: int, n_syn: int, ltp_prob):
     """B independent training streams (the batched train kernel's oracle).
 
     weights/lfsr u32[B, n, w], spike_trains u32[B, T, w], v i32[B, n],
-    teach i32[B, n].  Each stream is exactly one
-    :func:`fused_snn_window_ref` run — bit-exact (incl. each stream's
-    LFSR sequence) with B sequential single-stream windows.
+    teach i32[B, n]; ltp_prob is a shared int or a per-stream i32[B]
+    vector (mirroring the kernel's SMEM scalar operand).  Each stream is
+    exactly one :func:`fused_snn_window_ref` run — bit-exact (incl. each
+    stream's LFSR sequence) with B sequential single-stream windows.
     Returns (weights', v', fired bool[B, T, n], lfsr').
     """
+    b = weights.shape[0]
+    lp = jnp.broadcast_to(jnp.asarray(ltp_prob, jnp.int32), (b,))
 
-    def one(w, s, vv, st, tc):
+    def one(w, s, vv, st, tc, lp_b):
         return fused_snn_window_ref(w, s, vv, st, tc, threshold, leak,
-                                    w_exp, gain, n_syn, ltp_prob, True)
+                                    w_exp, gain, n_syn, lp_b, True)
 
-    return jax.vmap(one)(weights, spike_trains, v, lfsr_state, teach)
+    return jax.vmap(one)(weights, spike_trains, v, lfsr_state, teach, lp)
 
 
 def infer_window_batch_ref(weights, spike_trains, threshold: int,

@@ -54,6 +54,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 # --- in-kernel LFSR (bit-exact with repro.core.lfsr) -------------------------
@@ -256,9 +257,9 @@ def fused_snn_step(weights, pre_spikes, v, lfsr_state, teach, *,
 
 # --- batched + chunked training window (B streams x T cycles per launch) -----
 
-def _train_window_kernel(threshold, leak, w_exp, gain, n_syn, ltp_prob,
+def _train_window_kernel(threshold, leak, w_exp, gain, n_syn,
                          t_chunk, t_total,
-                         w_ref, s_ref, v_ref, st_ref, t_ref,
+                         lp_ref, w_ref, s_ref, v_ref, st_ref, t_ref,
                          wo_ref, vo_ref, f_ref, sto_ref):
     k = pl.program_id(2)
 
@@ -268,6 +269,10 @@ def _train_window_kernel(threshold, leak, w_exp, gain, n_syn, ltp_prob,
         vo_ref[...] = v_ref[...]
         sto_ref[...] = st_ref[...]
 
+    # per-stream LTP probability: an SMEM scalar operand rather than a
+    # kernel literal, so the B streams of one launch can run different
+    # active-learning schedules (ltp_prob vs ltp_prob_active)
+    ltp_prob = lp_ref[0, 0]
     teach = t_ref[...][0]
     base = k * t_chunk
     masked = t_total % t_chunk != 0   # zero-padded ragged tail present
@@ -303,7 +308,7 @@ def _train_window_kernel(threshold, leak, w_exp, gain, n_syn, ltp_prob,
 
 def train_window_batch(weights, spike_trains, v, lfsr_state, teach, *,
                        threshold: int, leak: int, w_exp: int, gain: int,
-                       n_syn: int, ltp_prob: int, block_n=128,
+                       n_syn: int, ltp_prob, block_n=128,
                        t_chunk: int | None = None,
                        t_total: int | None = None, interpret=False):
     """B independent training streams, T fused SNNU cycles each.
@@ -315,6 +320,11 @@ def train_window_batch(weights, spike_trains, v, lfsr_state, teach, *,
     revisits the same output block; state is carried by reading it
     back).  Per stream this is bit-exact with :func:`fused_snn_window`
     (including the LFSR sequence).
+
+    ``ltp_prob`` is an int shared by every stream or an i32[B] vector —
+    it enters the kernel as an SMEM scalar operand (one (1, 1) block per
+    batch grid step), NOT a lowering literal, so parallel-mode training
+    keeps per-block active-learning schedules in a single launch.
 
     ``t_chunk`` bounds the spike words in VMEM to t_chunk * w per grid
     step (default: the whole window).  ``t_total`` masks the cycles
@@ -330,9 +340,14 @@ def train_window_batch(weights, spike_trains, v, lfsr_state, teach, *,
         raise ValueError(f"T={t_steps} not a multiple of t_chunk={tc}; "
                          "pad the window (ops.py does)")
     tt = t_steps if t_total is None else t_total
+    lp = jnp.asarray(ltp_prob, jnp.int32)
+    if lp.ndim == 0:
+        lp = jnp.broadcast_to(lp, (b,))
+    if lp.shape != (b,):
+        raise ValueError(f"ltp_prob must be a scalar or shape ({b},), "
+                         f"got {lp.shape}")
     kern = functools.partial(_train_window_kernel, int(threshold),
-                             int(leak), w_exp, gain, n_syn, ltp_prob,
-                             tc, tt)
+                             int(leak), w_exp, gain, n_syn, tc, tt)
     return pl.pallas_call(
         kern,
         out_shape=(jax.ShapeDtypeStruct((b, n, w), jnp.uint32),
@@ -341,6 +356,8 @@ def train_window_batch(weights, spike_trains, v, lfsr_state, teach, *,
                    jax.ShapeDtypeStruct((b, n, w), jnp.uint32)),
         grid=(n // block_n, b, t_steps // tc),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (j, 0),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1, block_n, w), lambda i, j, k: (j, i, 0)),
             pl.BlockSpec((1, tc, w), lambda i, j, k: (j, k, 0)),
             pl.BlockSpec((1, block_n), lambda i, j, k: (j, i)),
@@ -354,7 +371,7 @@ def train_window_batch(weights, spike_trains, v, lfsr_state, teach, *,
             pl.BlockSpec((1, block_n, w), lambda i, j, k: (j, i, 0)),
         ),
         interpret=interpret,
-    )(weights, spike_trains, v, lfsr_state, teach)
+    )(lp[:, None], weights, spike_trains, v, lfsr_state, teach)
 
 
 # --- time-resident fused window (T cycles per launch) -------------------------

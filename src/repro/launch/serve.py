@@ -24,11 +24,48 @@ def make_prefill_step(model: Model, max_len: int):
     return prefill_step
 
 
+def _serve_snn(args) -> None:
+    """SNN serving demo: Poisson-encoded digit windows through the
+    dynamic-window-batching :class:`SNNServingEngine` (ragged T's to
+    exercise the padding path)."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs.wenquxing_snn import WENQUXING_22A
+    from repro.core.encoder import poisson_encode_batch
+    from repro.core.stdp import init_weights
+    from repro.data.digits import make_digits
+    from repro.engine import plan_from_config
+    from repro.serving import SNNRequest, SNNServingEngine
+
+    cfg = dataclasses.replace(WENQUXING_22A, n_steps=24)
+    plan = dataclasses.replace(plan_from_config(cfg),
+                               max_batch=args.slots)
+    weights = init_weights(cfg.n_neurons, cfg.words, dense=True)
+    neuron_class = np.tile(np.arange(cfg.n_classes), cfg.n_blocks)
+    imgs, _ = make_digits(args.requests, seed=0)
+    reqs = []
+    for i in range(args.requests):
+        t_i = cfg.n_steps - 4 * (i % 3)     # ragged window lengths
+        win = poisson_encode_batch(jax.random.key(1000 + i),
+                                   imgs[i][None], t_i)[0]
+        reqs.append(SNNRequest(rid=i, window=np.asarray(win)))
+    eng = SNNServingEngine(weights, plan, neuron_class=neuron_class)
+    eng.run(reqs)
+    print(f"wenquxing-snn: {sum(r.done for r in reqs)}/{len(reqs)} done, "
+          f"{eng.windows_served} windows in {eng.batches} batches "
+          f"(max_batch={plan.max_batch})")
+
+
 def main() -> None:
     """CLI launcher: serve any assigned architecture (reduced size on
-    CPU) with the continuous-batching engine.
+    CPU) with the continuous-batching engine, or the paper's SNN through
+    the window-batching engine.
 
     python -m repro.launch.serve --arch mixtral-8x22b --requests 6
+    python -m repro.launch.serve --arch wenquxing-snn --requests 6
     """
     import argparse
 
@@ -39,12 +76,16 @@ def main() -> None:
     from repro.serving import Request, ServingEngine
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_configs())
+    ap.add_argument("--arch", required=True,
+                    choices=list_configs() + ["wenquxing-snn"])
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
+
+    if args.arch == "wenquxing-snn":
+        return _serve_snn(args)
 
     cfg = reduced(get_config(args.arch))
     model = Model(cfg, dtype=jnp.float32, attn_chunk=16)

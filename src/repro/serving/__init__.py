@@ -1,5 +1,11 @@
-"""repro.serving — batched serving engine with continuous batching."""
+"""repro.serving — batched serving engines.
+
+Transformer path: continuous-batching :class:`ServingEngine` over KV
+cache slots.  SNN path: :class:`SNNServingEngine`, dynamic window
+batching over the unified SNN engine.
+"""
 
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.snn import SNNRequest, SNNServingEngine
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "SNNRequest", "SNNServingEngine"]

@@ -1,0 +1,123 @@
+"""SNN request serving: queue + dynamic window batching over the engine.
+
+The transformer path batches decode steps over KV-cache slots
+(:mod:`repro.serving.engine`); the SNN path batches whole presentation
+windows.  :class:`SNNServingEngine` keeps a request queue and, per
+engine step, admits up to ``plan.max_batch`` requests, pads their
+(possibly ragged) windows into one uint32[B, T, w] batch, and serves
+them with a single :meth:`SNNEngine.infer` launch — sharded over the
+plan's neuron mesh when one is present, so population-sharded serving
+and request batching compose.
+
+Ragged batching is bit-exact by construction: windows are zero-padded on
+the time axis, and a zero spike row adds no input counts while the
+membrane only leaks — with ``threshold >= 1`` a neuron that did not fire
+in the true window cannot fire in a padded cycle (after any cycle
+``v < threshold``), so padded cycles contribute no spikes.  The batch
+axis is likewise padded with all-zero windows (their counts are
+discarded), which pins the launch shape to ``(max_batch, T_q, w)`` with
+``T_q`` rounded up to the time quantum — one compile per window-length
+bucket instead of one per ragged batch shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import SNNEngine, SNNEnginePlan
+
+_T_QUANTUM = 8   # window lengths bucket to multiples of this (or t_chunk)
+
+
+@dataclasses.dataclass
+class SNNRequest:
+    """One classification request: a packed spike window in, counts out."""
+    rid: int
+    window: np.ndarray               # uint32[T, w] packed spike window
+    counts: np.ndarray | None = None  # int32[n] spike counts (result)
+    pred: int | None = None           # argmax class (if classes known)
+    done: bool = False
+
+
+class SNNServingEngine:
+    """Dynamic window batching over :meth:`SNNEngine.infer`.
+
+    weights: uint32[n, w] frozen population weights; ``neuron_class``
+    (int[n], optional) maps the maximally-firing neuron to a class label
+    for ``req.pred``.  Admission, padding and launch shape come from the
+    plan (``max_batch``, ``t_chunk``, placement).
+    """
+
+    def __init__(self, weights, plan: SNNEnginePlan, *,
+                 neuron_class=None):
+        if plan.threshold < 1:
+            raise ValueError("SNN serving requires threshold >= 1 "
+                             "(zero-padded cycles must stay silent)")
+        self.engine = SNNEngine(plan)
+        self.weights = jnp.asarray(weights, jnp.uint32)
+        self.neuron_class = (None if neuron_class is None
+                             else np.asarray(neuron_class))
+        self.words = int(self.weights.shape[1])
+        self.queue: deque[SNNRequest] = deque()
+        self.steps = 0
+        self.batches = 0
+        self.windows_served = 0
+
+    # --- admission -----------------------------------------------------
+
+    def submit(self, req: SNNRequest) -> None:
+        window = np.asarray(req.window, np.uint32)
+        if window.ndim != 2 or window.shape[1] != self.words:
+            raise ValueError(f"request {req.rid}: window must be "
+                             f"uint32[T, {self.words}], got "
+                             f"{window.shape}")
+        req.window = window
+        self.queue.append(req)
+
+    def _t_quantum(self) -> int:
+        tc = self.engine.plan.t_chunk
+        return tc if tc is not None else _T_QUANTUM
+
+    # --- serve ---------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit + serve one batch.  Returns requests completed."""
+        plan = self.engine.plan
+        batch: list[SNNRequest] = []
+        while self.queue and len(batch) < plan.max_batch:
+            batch.append(self.queue.popleft())
+        if not batch:
+            return 0
+        q = self._t_quantum()
+        t_max = max(r.window.shape[0] for r in batch)
+        t_pad = -(-t_max // q) * q
+        stacked = np.zeros((plan.max_batch, t_pad, self.words),
+                           np.uint32)
+        for i, r in enumerate(batch):
+            stacked[i, :r.window.shape[0]] = r.window
+        counts = np.asarray(
+            self.engine.infer(self.weights, jnp.asarray(stacked)))
+        for i, r in enumerate(batch):
+            r.counts = counts[i]
+            if self.neuron_class is not None:
+                r.pred = int(self.neuron_class[int(np.argmax(counts[i]))])
+            r.done = True
+        self.steps += 1
+        self.batches += 1
+        self.windows_served += len(batch)
+        return len(batch)
+
+    def run(self, requests: list[SNNRequest], max_steps: int = 10_000
+            ) -> list[SNNRequest]:
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while any(not r.done for r in requests) and steps < max_steps:
+            if self.step() == 0:
+                break
+            steps += 1
+        return requests

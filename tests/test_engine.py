@@ -1,0 +1,303 @@
+"""Engine-vs-legacy bit-exactness parity across all four dispatch paths
+(step / window / batch / sharded), plan validation, and the per-stream
+``ltp_prob`` schedule."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lfsr, network
+from repro.core.lif import lif_params
+from repro.core.rvsnn import snn_regfile, snn_regfile_batch
+from repro.core.stdp import stdp_params
+from repro.core.trainer import SNNTrainConfig, train
+from repro.data.digits import make_digits
+from repro.distributed import snn_mesh
+from repro.engine import (SNNEngine, SNNEnginePlan, plan_from_config,
+                          train_stream, train_stream_batch)
+from repro.kernels import ops
+
+N, W, T, B = 24, 5, 12, 3
+KW = dict(threshold=40, leak=3, w_exp=30, gain=4, n_syn=W * 32,
+          ltp_prob=500)
+
+
+def _plan(**over):
+    return SNNEnginePlan(**{**KW, **over})
+
+
+def _operands(seed=0):
+    rng = np.random.default_rng(seed)
+    weights = jnp.asarray(rng.integers(0, 2**32, (N, W), dtype=np.uint32))
+    windows = jnp.asarray(
+        rng.integers(0, 2**32, (B, T, W), dtype=np.uint32))
+    teach = jnp.asarray(rng.integers(-50, 50, (N,), dtype=np.int32))
+    return weights, windows, teach
+
+
+def _assert_rf_equal(a, b):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --- plan validation ---------------------------------------------------------
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        _plan(cycle_backend="windw")
+    with pytest.raises(ValueError):
+        _plan(kernel_backend="cuda")
+    with pytest.raises(ValueError):
+        _plan(t_chunk=0)
+    with pytest.raises(ValueError):
+        _plan(max_batch=0)
+    with pytest.raises(ValueError):
+        _plan(cycle_backend="step", mesh=snn_mesh.snn_mesh())
+    assert not _plan(w_exp=None).learn
+    assert _plan().learn
+
+
+def test_plan_from_config_active_schedule():
+    cfg = SNNTrainConfig(ltp_prob=16, ltp_prob_active=1023)
+    assert plan_from_config(cfg).ltp_prob == 16
+    assert plan_from_config(cfg, block_idx=1).ltp_prob == 1023
+    assert plan_from_config(cfg).n_syn == cfg.n_inputs
+
+
+# --- infer: window / step / interp / legacy ---------------------------------
+
+def test_infer_parity_all_paths():
+    weights, windows, _ = _operands()
+    lif = lif_params(KW["threshold"], KW["leak"])
+    want = network.infer_batch(weights, windows, lif,
+                               cycle_backend="step")
+    for plan in (_plan(), _plan(cycle_backend="step"),
+                 _plan(kernel_backend="interp", t_chunk=5)):
+        got = SNNEngine(plan).infer(weights, windows)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # legacy window entrypoint agrees too
+    np.testing.assert_array_equal(
+        np.asarray(network.infer_batch(weights, windows, lif)),
+        np.asarray(want))
+
+
+# --- train: window / step / SU-idle / legacy --------------------------------
+
+def test_train_parity_window_vs_step_vs_legacy():
+    weights, windows, teach = _operands(1)
+    lif = lif_params(KW["threshold"], KW["leak"])
+    stdp = stdp_params(KW["n_syn"], KW["w_exp"], KW["gain"],
+                       KW["ltp_prob"])
+    rf = snn_regfile(weights, seed=9)
+    out_w = SNNEngine(_plan()).train(rf, windows[0], teach)
+    out_s = SNNEngine(_plan(cycle_backend="step")).train(
+        rf, windows[0], teach)
+    leg_w = network.run_sample(rf, windows[0], lif, stdp, teach)
+    leg_s = network.run_sample(rf, windows[0], lif, stdp, teach,
+                               cycle_backend="step")
+    for other in (out_s, leg_w, leg_s):
+        _assert_rf_equal(out_w.regfile, other.regfile)
+        np.testing.assert_array_equal(np.asarray(out_w.spike_counts),
+                                      np.asarray(other.spike_counts))
+        np.testing.assert_array_equal(np.asarray(out_w.fired),
+                                      np.asarray(other.fired))
+
+
+def test_train_su_idle_matches_legacy_inference():
+    weights, windows, _ = _operands(2)
+    lif = lif_params(KW["threshold"], KW["leak"])
+    rf = snn_regfile(weights, seed=4)
+    got = SNNEngine(_plan(w_exp=None)).train(rf, windows[0])
+    want = network.run_sample(rf, windows[0], lif, None)
+    _assert_rf_equal(got.regfile, want.regfile)
+    np.testing.assert_array_equal(np.asarray(got.fired),
+                                  np.asarray(want.fired))
+    # SU idle: weights and LFSR untouched
+    np.testing.assert_array_equal(np.asarray(got.regfile.weights),
+                                  np.asarray(weights))
+
+
+# --- train_batch: batched grid vs sequential / step / legacy ----------------
+
+def test_train_batch_parity_sequential_and_step():
+    weights, windows, _ = _operands(3)
+    rng = np.random.default_rng(7)
+    wts_b = jnp.asarray(rng.integers(0, 2**32, (B, N, W),
+                                     dtype=np.uint32))
+    teach_b = jnp.asarray(rng.integers(-50, 50, (B, N), dtype=np.int32))
+    seeds = [11, 22, 33]
+    rfs = snn_regfile_batch(wts_b, seeds)
+    eng = SNNEngine(_plan())
+    rfs2, counts, fired = eng.train_batch(rfs, windows, teach_b)
+    # stream b == one engine.train on regfile b
+    for i in range(B):
+        rf_i = snn_regfile(wts_b[i], seed=seeds[i])
+        out = eng.train(rf_i, windows[i], teach_b[i])
+        np.testing.assert_array_equal(np.asarray(rfs2.weights[i]),
+                                      np.asarray(out.regfile.weights))
+        np.testing.assert_array_equal(np.asarray(rfs2.lfsr[i]),
+                                      np.asarray(out.regfile.lfsr))
+        np.testing.assert_array_equal(np.asarray(counts[i]),
+                                      np.asarray(out.spike_counts))
+        np.testing.assert_array_equal(np.asarray(fired[i]),
+                                      np.asarray(out.fired))
+    # step fallback is bit-exact with the batched window grid
+    rfs3, counts3, fired3 = SNNEngine(
+        _plan(cycle_backend="step")).train_batch(rfs, windows, teach_b)
+    _assert_rf_equal(rfs2, rfs3)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(counts3))
+    np.testing.assert_array_equal(np.asarray(fired), np.asarray(fired3))
+
+
+def test_train_batch_rejects_inference_plan():
+    weights, windows, _ = _operands()
+    rfs = snn_regfile_batch(
+        jnp.broadcast_to(weights, (B, N, W)), [1, 2, 3])
+    teach = jnp.zeros((B, N), jnp.int32)
+    with pytest.raises(ValueError):
+        SNNEngine(_plan(w_exp=None)).train_batch(rfs, windows, teach)
+
+
+def test_stream_helpers_match_legacy_network():
+    """engine.train_stream / train_stream_batch == network legacy
+    entrypoints (same params threaded the old way)."""
+    weights, windows, _ = _operands(5)
+    lif = lif_params(KW["threshold"], KW["leak"])
+    stdp = stdp_params(KW["n_syn"], KW["w_exp"], KW["gain"],
+                       KW["ltp_prob"])
+    n_samples = 3
+    rng = np.random.default_rng(13)
+    trains = jnp.asarray(rng.integers(0, 2**32, (n_samples, T, W),
+                                      dtype=np.uint32))
+    teach = jnp.asarray(rng.integers(-50, 50, (n_samples, N),
+                                     dtype=np.int32))
+    eng = SNNEngine(_plan())
+    rf = snn_regfile(weights, seed=21)
+    got_rf, got_c = train_stream(eng, rf, trains, teach)
+    want_rf, want_c = network.train_stream(rf, trains, teach, lif, stdp)
+    _assert_rf_equal(got_rf, want_rf)
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+
+    wts_b = jnp.broadcast_to(weights, (B, N, W))
+    rfs = snn_regfile_batch(wts_b, [5, 6, 7])
+    trains_b = jnp.broadcast_to(trains, (B,) + trains.shape)
+    teach_b = jnp.broadcast_to(teach, (B,) + teach.shape)
+    got_rfs, got_cb = train_stream_batch(eng, rfs, trains_b, teach_b)
+    want_rfs, want_cb = network.train_stream_batch(rfs, trains_b,
+                                                   teach_b, lif, stdp)
+    _assert_rf_equal(got_rfs, want_rfs)
+    np.testing.assert_array_equal(np.asarray(got_cb),
+                                  np.asarray(want_cb))
+
+
+# --- sharded dispatch (plan placement) ---------------------------------------
+
+def test_sharded_plan_parity_all_verbs():
+    """Verbs under a neuron mesh == unsharded verbs == legacy snn_mesh
+    entrypoints (whatever mesh this process has)."""
+    mesh = snn_mesh.snn_mesh()
+    weights, windows, teach = _operands(6)
+    plan_m = _plan(mesh=mesh)
+    plan_1 = _plan()
+    eng_m, eng_1 = SNNEngine(plan_m), SNNEngine(plan_1)
+
+    got = eng_m.infer(weights, windows)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(eng_1.infer(weights, windows)))
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(snn_mesh.sharded_infer_window_batch(
+            weights, windows, threshold=KW["threshold"],
+            leak=KW["leak"], mesh=mesh)))
+
+    rf = snn_regfile(weights, seed=31)
+    out_m = eng_m.train(rf, windows[0], teach)
+    out_1 = eng_1.train(rf, windows[0], teach)
+    _assert_rf_equal(out_m.regfile, out_1.regfile)
+    np.testing.assert_array_equal(np.asarray(out_m.fired),
+                                  np.asarray(out_1.fired))
+
+    rng = np.random.default_rng(17)
+    wts_b = jnp.asarray(rng.integers(0, 2**32, (B, N, W),
+                                     dtype=np.uint32))
+    teach_b = jnp.asarray(rng.integers(-50, 50, (B, N), dtype=np.int32))
+    rfs = snn_regfile_batch(wts_b, [41, 42, 43])
+    lp = jnp.asarray([100, 500, 900], jnp.int32)
+    got_m = eng_m.train_batch(rfs, windows, teach_b, ltp_prob=lp)
+    got_1 = eng_1.train_batch(rfs, windows, teach_b, ltp_prob=lp)
+    _assert_rf_equal(got_m[0], got_1[0])
+    np.testing.assert_array_equal(np.asarray(got_m[1]),
+                                  np.asarray(got_1[1]))
+    np.testing.assert_array_equal(np.asarray(got_m[2]),
+                                  np.asarray(got_1[2]))
+
+
+def test_sharded_train_batch_non_divisible_rows():
+    """Stream rows not divisible by the mesh pad + slice transparently."""
+    mesh = snn_mesh.snn_mesh()
+    d = mesh.shape["neuron"]
+    n = d * 2 + 1
+    rng = np.random.default_rng(23)
+    wts = jnp.asarray(rng.integers(0, 2**32, (2, n, W), dtype=np.uint32))
+    spk = jnp.asarray(rng.integers(0, 2**32, (2, T, W), dtype=np.uint32))
+    v = jnp.zeros((2, n), jnp.int32)
+    teach = jnp.asarray(rng.integers(-50, 50, (2, n), dtype=np.int32))
+    st = jnp.stack([lfsr.seed(3 + i, n * W).reshape(n, W)
+                    for i in range(2)])
+    kw = {k: v2 for k, v2 in KW.items() if k != "ltp_prob"}
+    got = snn_mesh.sharded_train_window_batch(
+        wts, spk, v, st, teach, ltp_prob=200, mesh=mesh, **kw)
+    want = ops.train_window_batch(wts, spk, v, st, teach, ltp_prob=200,
+                                  **kw)
+    for g, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+# --- per-stream ltp_prob (SMEM scalar operand) -------------------------------
+
+@pytest.mark.parametrize("backend,t_chunk", [("ref", None),
+                                             ("interp", 4)])
+def test_per_stream_ltp_prob_matches_per_plan_runs(backend, t_chunk):
+    """train_batch with an i32[B] schedule == per-stream train calls,
+    each under a plan pinned to that stream's ltp_prob."""
+    weights, windows, _ = _operands(8)
+    rng = np.random.default_rng(29)
+    wts_b = jnp.asarray(rng.integers(0, 2**32, (B, N, W),
+                                     dtype=np.uint32))
+    teach_b = jnp.asarray(rng.integers(-50, 50, (B, N), dtype=np.int32))
+    seeds = [51, 52, 53]
+    rfs = snn_regfile_batch(wts_b, seeds)
+    lp = jnp.asarray([16, 500, 1023], jnp.int32)
+    eng = SNNEngine(_plan(kernel_backend=backend, t_chunk=t_chunk))
+    rfs2, counts, _ = eng.train_batch(rfs, windows, teach_b, ltp_prob=lp)
+    for i in range(B):
+        plan_i = _plan(kernel_backend=backend, t_chunk=t_chunk,
+                       ltp_prob=int(lp[i]))
+        out = SNNEngine(plan_i).train(
+            snn_regfile(wts_b[i], seed=seeds[i]), windows[i], teach_b[i])
+        np.testing.assert_array_equal(np.asarray(rfs2.weights[i]),
+                                      np.asarray(out.regfile.weights))
+        np.testing.assert_array_equal(np.asarray(rfs2.lfsr[i]),
+                                      np.asarray(out.regfile.lfsr))
+        np.testing.assert_array_equal(np.asarray(counts[i]),
+                                      np.asarray(out.spike_counts))
+
+
+def test_trainer_parallel_mode_keeps_active_schedule():
+    """Parallel training now honors ltp_prob_active for blocks >= 1:
+    changing it changes only the later blocks' weights."""
+    imgs, labels = make_digits(60, seed=3)
+    base = SNNTrainConfig(n_neurons=20, epochs=1, n_steps=16,
+                          train_mode="parallel", ltp_prob=16,
+                          ltp_prob_active=1023)
+    other = dataclasses.replace(base, ltp_prob_active=16)
+    m_a = train(base, imgs, labels)
+    m_b = train(other, imgs, labels)
+    wa, wb = np.asarray(m_a.weights), np.asarray(m_b.weights)
+    # block 0 trains at the base ltp_prob in both configs
+    np.testing.assert_array_equal(wa[:10], wb[:10])
+    # block 1 sees ltp_prob_active 1023 vs 16 -> different weights
+    assert (wa[10:] != wb[10:]).any()

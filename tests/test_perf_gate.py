@@ -1,0 +1,80 @@
+"""CI perf gate: regression detection over BENCH_kernels.json rows."""
+
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from benchmarks.run import (GATE_THRESHOLD, GATE_TIME_BASE_MIN,  # noqa: E402
+                            GATE_TIME_FLOOR, check_regressions,
+                            load_baseline)
+
+
+def test_detects_lost_structural_speedup():
+    base = {"k/window": {"time_ratio": 8.0, "bytes_ratio": 30.0}}
+    rows = {"k/window": {"time_ratio": 1.0, "bytes_ratio": 30.0}}
+    msgs = check_regressions(base, rows)
+    assert len(msgs) == 1 and "time_ratio" in msgs[0]
+
+
+def test_noisy_but_still_structural_time_ratio_passes():
+    """Wall-clock swings above the floor never gate (the committed
+    baseline's time_ratios vary several-x run to run)."""
+    base = {"k/window": {"time_ratio": 8.0}}
+    rows = {"k/window": {"time_ratio": GATE_TIME_FLOOR + 0.1}}
+    assert check_regressions(base, rows) == []
+
+
+def test_bytes_ratio_always_gates():
+    base = {"k/fused": {"time_ratio": 1.1, "bytes_ratio": 1.29}}
+    rows = {"k/fused": {"time_ratio": 1.1, "bytes_ratio": 0.5}}
+    msgs = check_regressions(base, rows)
+    assert len(msgs) == 1 and "bytes_ratio" in msgs[0]
+
+
+def test_noise_band_time_rows_never_gate():
+    """Rows whose baseline ratio is not clearly structural (< base min)
+    are exempt from time gating — their noise band straddles any
+    threshold (observed 1.1 <-> 1.55 on identical code)."""
+    base = {"k/fused": {"time_ratio": GATE_TIME_BASE_MIN - 0.5}}
+    rows = {"k/fused": {"time_ratio": 0.4}}
+    assert check_regressions(base, rows) == []
+
+
+def test_within_threshold_passes():
+    base = {"k/w": {"bytes_ratio": 8.0}}
+    rows = {"k/w": {"bytes_ratio": 8.0 * (1.0 - GATE_THRESHOLD + 0.01)}}
+    assert check_regressions(base, rows) == []
+
+
+def test_new_removed_and_ratio_free_rows_ignored():
+    base = {"gone": {"time_ratio": 9.0}, "interp": {"us_per_call": 3.0}}
+    rows = {"new": {"time_ratio": 9.0}, "interp": {"us_per_call": 9.0}}
+    assert check_regressions(base, rows) == []
+
+
+def test_committed_baseline_loads_and_has_gated_rows():
+    baseline = load_baseline(str(REPO / "BENCH_kernels.json"))
+    assert baseline is not None
+    assert any("bytes_ratio" in row for row in baseline.values())
+    assert any(row.get("time_ratio", 0) >= GATE_TIME_BASE_MIN
+               for row in baseline.values())
+
+
+def test_missing_baseline_returns_none():
+    assert load_baseline(str(REPO / "no_such_baseline.json")) is None
+
+
+def test_gate_without_json_is_an_error():
+    """--gate must never be a silent no-op."""
+    import subprocess
+    proc = subprocess.run(
+        [sys.executable, "benchmarks/run.py", "no_such_module",
+         "--gate"],
+        cwd=REPO, capture_output=True, text=True, timeout=300,
+        env={**__import__("os").environ,
+             "PYTHONPATH": f"{REPO / 'src'}:{REPO}"})
+    assert proc.returncode == 2, proc.stdout + proc.stderr
+    assert "--gate requires --json" in proc.stdout

@@ -1,0 +1,121 @@
+"""SNNServingEngine unit tests: admission, ragged batch padding,
+request completion counts, and the launch CLI integration."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import snn_mesh
+from repro.engine import SNNEnginePlan
+from repro.kernels import ops
+from repro.serving import SNNRequest, SNNServingEngine
+
+REPO = Path(__file__).resolve().parents[1]
+
+N, W = 20, 4
+PLAN = SNNEnginePlan(threshold=40, leak=3, w_exp=None, max_batch=3)
+
+
+def _weights(seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2**32, (N, W), dtype=np.uint32))
+
+
+def _request(rid, t_steps, seed=None):
+    rng = np.random.default_rng(100 + rid if seed is None else seed)
+    return SNNRequest(rid=rid, window=rng.integers(
+        0, 2**32, (t_steps, W), dtype=np.uint32))
+
+
+def test_admission_respects_max_batch():
+    eng = SNNServingEngine(_weights(), PLAN)
+    reqs = [_request(i, 10) for i in range(7)]
+    out = eng.run(reqs)
+    assert all(r.done for r in out)
+    assert eng.windows_served == 7
+    assert eng.batches == 3          # 3 + 3 + 1 at max_batch=3
+    assert all(r.counts is not None and r.counts.shape == (N,)
+               for r in out)
+
+
+def test_ragged_batch_bit_exact_with_individual_serving():
+    """One ragged batch (T = 5/9/12, padded to one launch) returns the
+    same counts as serving each window alone at its true length."""
+    weights = _weights(1)
+    eng = SNNServingEngine(weights, PLAN)
+    reqs = [_request(0, 5), _request(1, 9), _request(2, 12)]
+    eng.run(reqs)
+    assert eng.batches == 1
+    for r in reqs:
+        want = ops.infer_window_batch(
+            weights, jnp.asarray(r.window)[None],
+            threshold=PLAN.threshold, leak=PLAN.leak)[0]
+        np.testing.assert_array_equal(r.counts, np.asarray(want))
+
+
+def test_batch_padding_rows_do_not_leak_into_results():
+    """A lone request (batch padded up to max_batch with zero windows)
+    matches a full-batch serve of the same window."""
+    weights = _weights(2)
+    alone = _request(0, 8, seed=200)
+    full = [_request(i, 8, seed=200) for i in range(3)]
+    e1 = SNNServingEngine(weights, PLAN)
+    e1.run([alone])
+    e2 = SNNServingEngine(weights, PLAN)
+    e2.run(full)
+    np.testing.assert_array_equal(alone.counts, full[0].counts)
+
+
+def test_pred_uses_neuron_class():
+    weights = _weights(3)
+    classes = np.arange(N) % 10
+    eng = SNNServingEngine(weights, PLAN, neuron_class=classes)
+    req = _request(0, 10)
+    eng.run([req])
+    assert req.pred == int(classes[int(np.argmax(req.counts))])
+
+
+def test_sharded_serving_matches_unsharded():
+    """Plan placement composes with request batching: a mesh-carrying
+    plan serves identical counts."""
+    weights = _weights(4)
+    import dataclasses
+    plan_m = dataclasses.replace(PLAN, mesh=snn_mesh.snn_mesh())
+    reqs_a = [_request(i, 10) for i in range(4)]
+    reqs_b = [_request(i, 10) for i in range(4)]
+    SNNServingEngine(weights, PLAN).run(reqs_a)
+    SNNServingEngine(weights, plan_m).run(reqs_b)
+    for a, b in zip(reqs_a, reqs_b):
+        np.testing.assert_array_equal(a.counts, b.counts)
+
+
+def test_submit_validates_window_shape():
+    eng = SNNServingEngine(_weights(), PLAN)
+    with pytest.raises(ValueError):
+        eng.submit(SNNRequest(rid=0, window=np.zeros((10, W + 1),
+                                                     np.uint32)))
+
+
+def test_serving_requires_positive_threshold():
+    with pytest.raises(ValueError):
+        SNNServingEngine(_weights(),
+                         SNNEnginePlan(threshold=0, w_exp=None))
+
+
+def test_launch_serve_snn_cli_completes_requests():
+    """Acceptance: repro.launch.serve --arch wenquxing-snn --requests 6
+    completes every request through SNNServingEngine."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "wenquxing-snn", "--requests", "6"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "wenquxing-snn: 6/6 done" in proc.stdout
