@@ -215,6 +215,54 @@ def run() -> dict:
         print(f"# window-shard row skipped "
               f"(rc={proc.returncode}): {proc.stderr.strip()[:200]}")
 
+    # --- on-core encode: intensity stream vs pre-packed spike windows ---
+    # The serving input shrinks from the T*w*4-byte packed window to the
+    # n_in uint8 intensities it was generated from (bytes_ratio = T/8 —
+    # the encode-fused kernel draws each cycle's spikes in VMEM).  Wall
+    # clock compares end-to-end from intensities: host counter-encode +
+    # pre-packed launch vs the single encode-fused launch (both XLA-ref
+    # on CPU; the structural metric that transfers to TPU is the bytes).
+    from repro.core.encoder import encode_from_counter_batch
+
+    b = 8
+    for n, w, t_steps in ((1024, 64, 32), (1024, 64, 128)):
+        n_in = w * 32
+        rng_e = np.random.default_rng(13)
+        weights = jnp.asarray(
+            rng_e.integers(0, 2**32, (n, w), dtype=np.uint32))
+        inten = jnp.asarray(
+            rng_e.integers(0, 256, (b, n_in), dtype=np.uint8))
+        seeds = jnp.arange(1, b + 1, dtype=jnp.int32)
+
+        pre = jax.jit(lambda wt, x, s, t=t_steps: ops.infer_window_batch(
+            wt, encode_from_counter_batch(s, x, t),
+            threshold=KW["threshold"], leak=KW["leak"]))
+        enc = jax.jit(
+            lambda wt, x, s, t=t_steps: ops.infer_window_batch_encode(
+                wt, x, s, n_steps=t, threshold=KW["threshold"],
+                leak=KW["leak"]))
+
+        t_pre = time_fn(pre, weights, inten, seeds, reps=5)
+        t_enc = time_fn(enc, weights, inten, seeds, reps=5)
+        in_pre = t_steps * w * 4           # packed window bytes/sample
+        in_enc = n_in                      # uint8 intensity bytes/sample
+        emit(f"kernels/encode-{n}x{n_in}xT{t_steps}", t_enc,
+             f"input_bytes={in_enc};bytes_ratio={in_pre/in_enc:.2f}x;"
+             f"time_ratio={t_pre/max(t_enc,1e-9):.2f}x")
+        out[("encode", n, n_in, t_steps)] = {
+            "bytes_ratio": in_pre / in_enc,
+            "time_ratio": t_pre / max(t_enc, 1e-9)}
+
+    # analytic streaming extreme: at T=2048 the pre-packed input stream
+    # is 256x the intensity bytes (and the encode kernel's VMEM holds no
+    # spike slab at all)
+    n_in = 64 * 32
+    emit(f"kernels/encode-stream-1024x{n_in}xT2048", 0.0,
+         f"input_bytes={n_in};"
+         f"bytes_ratio={2048 * 64 * 4 / n_in:.2f}x")
+    out[("encode-stream", 1024, n_in, 2048)] = {
+        "bytes_ratio": 2048 * 64 * 4 / n_in}
+
     # --- chunked spike streaming: bounded VMEM at unbounded T -----------
     # (analytic: the streamed slab is the only T-dependent VMEM term)
     for n, w, t_steps, tc in ((1024, 64, 2048, 64),):
@@ -238,6 +286,20 @@ def run() -> dict:
                                         t_chunk=4, **KW),
         weights, spk, v, st, teach, reps=3, warmup=1)
     emit(f"kernels/window-interp-{n}x{w * 32}xT{t_steps}c4", t_i,
+         "backend=interp")
+
+    # ...and the encode-fused serving kernel body (interpret mode,
+    # chunked, ragged lengths) — documents the in-VMEM draw itself runs
+    inten_i = jnp.asarray(rng.integers(0, 256, (2, w * 32),
+                                       dtype=np.uint8))
+    t_ie = time_fn(
+        lambda *a: ops.infer_window_batch_encode(
+            *a, n_steps=t_steps, threshold=KW["threshold"],
+            leak=KW["leak"], t_total=jnp.asarray([t_steps, t_steps - 3]),
+            t_chunk=4, backend="interp"),
+        weights, inten_i, jnp.asarray([1, 2], jnp.int32),
+        reps=3, warmup=1)
+    emit(f"kernels/encode-interp-{n}x{w * 32}xT{t_steps}c4", t_ie,
          "backend=interp")
     return out
 

@@ -20,6 +20,12 @@ defaults to ``BENCH_kernels.json``; the ``=`` form keeps the module
 filter unambiguous (``run.py --json kernels_bench`` filters, it does
 not name the output file).
 
+``--history[=DIR]`` additionally archives the JSON rows as
+``DIR/<git-sha>.json`` (DIR defaults to ``bench_history``), one
+immutable artifact per commit — CI uploads the directory, so the perf
+trajectory across PRs is reconstructable from artifacts instead of a
+single moving baseline.
+
 ``--gate`` turns the run into a CI perf gate: before overwriting PATH,
 the committed rows there become the baseline, and any shared row whose
 ``time_ratio`` or ``bytes_ratio`` drops by more than ``GATE_THRESHOLD``
@@ -45,6 +51,29 @@ GATE_THRESHOLD = 0.25          # fail on >25% drop of a gated ratio
 GATE_TIME_BASE_MIN = 4.0       # only clearly-structural rows time-gate
 GATE_TIME_FLOOR = 1.25         # ...and only when the speedup is gone
 _GATED_METRICS = ("time_ratio", "bytes_ratio")
+
+
+def archive_history(rows: dict, history_dir: str) -> str:
+    """Write rows to ``history_dir/<git-sha>.json``; returns the path.
+
+    The sha comes from ``git rev-parse --short HEAD`` (falls back to
+    ``nogit`` outside a checkout) — one artifact per commit, never
+    overwritten by later runs of the same tree state.
+    """
+    import os
+    import subprocess
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=30).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    os.makedirs(history_dir, exist_ok=True)
+    path = os.path.join(history_dir, f"{sha or 'nogit'}.json")
+    with open(path, "w") as fh:
+        json.dump(rows, fh, indent=2, sort_keys=True)
+    return path
 
 
 def load_baseline(path: str) -> dict | None:
@@ -103,6 +132,7 @@ def main(argv: list[str] | None = None) -> None:
     args = list(sys.argv[1:] if argv is None else argv)
     json_path = None
     gate = False
+    history_dir = None
     for a in list(args):
         if a == "--json":
             json_path = "BENCH_kernels.json"
@@ -113,7 +143,17 @@ def main(argv: list[str] | None = None) -> None:
         elif a == "--gate":
             gate = True
             args.remove(a)
+        elif a == "--history":
+            history_dir = "bench_history"
+            args.remove(a)
+        elif a.startswith("--history="):
+            history_dir = a.split("=", 1)[1] or "bench_history"
+            args.remove(a)
 
+    if history_dir is not None and json_path is None:
+        print("# --history requires --json (nothing to archive)",
+              flush=True)
+        sys.exit(2)
     if gate and json_path is None:
         print("# --gate requires --json (nothing to compare)",
               flush=True)
@@ -141,6 +181,9 @@ def main(argv: list[str] | None = None) -> None:
         with open(json_path, "w") as fh:
             json.dump(rows, fh, indent=2, sort_keys=True)
         print(f"# wrote {len(rows)} rows to {json_path}", flush=True)
+        if history_dir is not None:
+            hist = archive_history(rows, history_dir)
+            print(f"# archived history artifact {hist}", flush=True)
         if baseline is None:
             if gate:
                 print(f"# perf gate FAILED: no committed baseline at "

@@ -11,7 +11,10 @@ Layers (bottom-up):
 """
 
 from repro.core.bitpack import n_words, pack, popcount, tail_mask, unpack
-from repro.core.encoder import poisson_encode, poisson_encode_batch
+from repro.core.encoder import (encode_from_counter,
+                                encode_from_counter_batch, poisson_encode,
+                                poisson_encode_batch, quantize_intensities,
+                                spike_rate)
 from repro.core.lif import LIFParams, lif_params, lif_reset, lif_step
 from repro.core.network import SNNOutput, infer_batch, run_sample, train_stream
 from repro.core.preprocess import deskew, preprocess, preprocess_batch, soft_threshold

@@ -5,10 +5,21 @@ P = x, where x needs to be normalized to [0,1]" — i.e. each pixel fires
 as an independent Bernoulli(intensity) per time cycle.  The encoder
 outputs *packed* uint32 spike words (the SPU's native operand).
 
-Randomness note (DESIGN.md §7): the paper's encoder runs on-core; its RNG
-is unspecified, so we use JAX's counter-based PRNG here (statistical
-fidelity), reserving the bit-exact LFSR for the LTD path where the paper
-specifies it.
+Two encoders live here:
+
+``poisson_encode``
+    JAX counter-based PRNG (statistical fidelity; DESIGN.md §7).  Used
+    by the training pipeline, where the exact bit stream is not part of
+    the architecture contract.
+
+``encode_from_counter``
+    The deterministic host oracle of the **in-kernel encode path**: the
+    same stateless ``lfsr.counter_hash`` draw the window kernels run in
+    VMEM, so a kernel launch that generates its own spikes from uint8
+    intensities is bit-exact with this function.  A spike at (cycle t,
+    input i) fires iff ``counter_hash(seed, t, i) & 0xFF < intensity``,
+    i.e. P = intensity / 256 — intensity 0 is silent by construction
+    (the property batch-padding in serving relies on).
 """
 
 from __future__ import annotations
@@ -16,7 +27,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitpack import pack
+from repro.core import lfsr
+from repro.core.bitpack import pack, popcount, unpack
 
 
 def poisson_encode(key: jax.Array, intensities: jnp.ndarray,
@@ -38,7 +50,81 @@ def poisson_encode_batch(key: jax.Array, batch: jnp.ndarray,
     return jax.vmap(lambda k, x: poisson_encode(k, x, n_steps))(keys, batch)
 
 
+def quantize_intensities(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalized [0, 1] intensities -> the uint8 operand of the counter
+    encoder (P = round(x * 255) / 256 per cycle)."""
+    return jnp.clip(jnp.round(jnp.asarray(x, jnp.float32) * 255.0),
+                    0, 255).astype(jnp.uint8)
+
+
+def encode_from_counter(seed, intensities: jnp.ndarray, n_steps: int,
+                        *, t0: int = 0) -> jnp.ndarray:
+    """Deterministic counter encode: uint8[n] -> packed uint32[T, w].
+
+    Bit-exact host oracle of the kernels' in-VMEM draw (same
+    ``lfsr.counter_hash``, same low-8-bit compare).  ``t0`` offsets the
+    cycle counter, so any slice of a window can be regenerated in
+    isolation — e.g. just the final cycle for the spike register.
+    """
+    inten = jnp.asarray(intensities)
+    n = inten.shape[-1]
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    cyc = jnp.arange(t0, t0 + n_steps, dtype=jnp.uint32)
+    h = lfsr.counter_hash(jnp.asarray(seed, jnp.uint32),
+                          cyc[:, None], idx[None, :])
+    bits = (jnp.bitwise_and(h, jnp.uint32(0xFF))
+            < inten.astype(jnp.uint32)).astype(jnp.uint32)
+    return pack(bits)
+
+
+def encode_from_counter_batch(seeds, intensities: jnp.ndarray,
+                              n_steps: int) -> jnp.ndarray:
+    """Per-sample-seeded counter encode: uint8[B, n] -> uint32[B, T, w].
+
+    ``seeds`` is an i32/u32[B] vector or a scalar broadcast to every
+    sample (all-identical seeds produce all-identical windows).
+    """
+    b = intensities.shape[0]
+    sd = jnp.broadcast_to(jnp.asarray(seeds, jnp.uint32), (b,))
+    return jax.vmap(
+        lambda s, x: encode_from_counter(s, x, n_steps))(sd, intensities)
+
+
+def encode_windows_host(seeds, intensities: jnp.ndarray, n_steps: int,
+                        words: int, t_total=None) -> jnp.ndarray:
+    """Host-side counter encode shaped for the window kernels:
+    uint8[B, n_in] -> u32[B, T, words].
+
+    The ground truth of the in-kernel encode path: windows from
+    :func:`encode_from_counter_batch`, zero-padded on the word axis to
+    the kernels' ``words`` width and — when ``t_total`` (i32[B]) is
+    given — zero-masked past each sample's true window length,
+    mirroring the serving kernel's SMEM mask (count-identical for any
+    threshold >= 1: a zero row adds no input counts and the membrane
+    only leaks).
+    """
+    wins = encode_from_counter_batch(seeds, intensities, n_steps)
+    pad = words - wins.shape[-1]
+    if pad:
+        wins = jnp.pad(wins, ((0, 0), (0, 0), (0, pad)))
+    if t_total is not None:
+        mask = (jnp.arange(n_steps)[None, :, None]
+                < jnp.asarray(t_total, jnp.int32)[:, None, None])
+        wins = jnp.where(mask, wins, jnp.uint32(0))
+    return wins
+
+
 def spike_rate(packed: jnp.ndarray, n: int) -> jnp.ndarray:
-    """Mean firing rate per input across time.  packed: uint32[T, w]."""
-    from repro.core.bitpack import unpack
+    """Population firing rate per time cycle.  packed: uint32[T, w].
+
+    Returns float32[T]: the fraction of the ``n`` inputs spiking at each
+    cycle, computed as a per-time-slice popcount over the packed words —
+    the raster is never unpacked (tail bits past ``n`` are zero by the
+    packing convention, so they never count).
+    """
+    return popcount(packed, axis=-1).astype(jnp.float32) / n
+
+
+def spike_rate_per_input(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Mean firing rate per input across time: float32[n]."""
     return jnp.mean(unpack(packed, n).astype(jnp.float32), axis=0)

@@ -23,6 +23,15 @@ _TAP_SHIFTS = (0, 2, 3, 5)  # taps 16, 14, 13, 11
 
 LFSR_PERIOD = (1 << 16) - 1
 
+# 32-bit golden-ratio constant; 0x9E37 (used by :func:`seed`) is its
+# 16-bit truncation.  PHI32 and the odd mix constants below define the
+# stateless counter draw shared by the host encoder oracle and the
+# in-kernel encode path — both must use EXACTLY these constants.
+PHI32 = 0x9E3779B9
+_WEYL_IDX = 0x85EBCA6B     # odd, decorrelates the lane axis from time
+_MIX1 = 0x7FEB352D         # xorshift-multiply finalizer ("lowbias32")
+_MIX2 = 0x846CA68B
+
 
 def seed(base: int, n: int) -> jnp.ndarray:
     """Produce ``n`` distinct nonzero 16-bit LFSR states from ``base``.
@@ -47,6 +56,30 @@ def step(state: jnp.ndarray) -> jnp.ndarray:
                        jnp.left_shift(fb, jnp.uint32(15))),
         jnp.uint32(0xFFFF),
     )
+
+
+def counter_hash(seed, cycle, idx) -> jnp.ndarray:
+    """Stateless counter-based uint32 draw for (cycle, lane) pairs.
+
+    A Weyl sequence over two axes — ``cycle`` steps by the golden-ratio
+    constant :data:`PHI32`, ``idx`` by another odd constant — finalized
+    with an xorshift-multiply mix, all in wrapping uint32 arithmetic.
+    No carried PRNG state: any (seed, cycle, idx) triple can be drawn in
+    isolation, so chunked and sharded kernel launches regenerate
+    identical values without cross-launch or cross-shard broadcast.
+
+    All three arguments broadcast; the result has their broadcast shape.
+    The encode path consumes the low 8 bits (a spike fires iff
+    ``hash & 0xFF < intensity``), so P(fire) = intensity / 256.
+    """
+    h = (jnp.asarray(seed, jnp.uint32)
+         + jnp.asarray(cycle, jnp.uint32) * jnp.uint32(PHI32)
+         + jnp.asarray(idx, jnp.uint32) * jnp.uint32(_WEYL_IDX))
+    h = jnp.bitwise_xor(h, jnp.right_shift(h, jnp.uint32(16)))
+    h = h * jnp.uint32(_MIX1)
+    h = jnp.bitwise_xor(h, jnp.right_shift(h, jnp.uint32(15)))
+    h = h * jnp.uint32(_MIX2)
+    return jnp.bitwise_xor(h, jnp.right_shift(h, jnp.uint32(16)))
 
 
 def draw10(state: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:

@@ -65,6 +65,9 @@ class SNNTrainConfig:
                                     # error set) | "parallel" (batched
                                     # training grid, all blocks at once)
     window_chunk: int | None = None  # VMEM spike-slab size (None = T)
+    encode: str = "host"             # intensity-verb encode placement:
+                                     # "host" | "kernel" (in-VMEM draw)
+    encode_seed: int = 0             # counter base for the in-kernel draw
 
     @property
     def n_blocks(self) -> int:

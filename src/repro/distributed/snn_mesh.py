@@ -178,6 +178,121 @@ def sharded_train_window_batch(weights, spike_trains, v, lfsr_state,
     return w2[:, :n], v2[:, :n], fired[:, :, :n], s2[:, :n]
 
 
+def sharded_infer_window_batch_encode(weights, intensities, seeds, *,
+                                      n_steps: int, threshold: int,
+                                      leak: int, t_total=None,
+                                      t_chunk: int | None = None,
+                                      backend: str = "ref",
+                                      mesh: Mesh | None = None
+                                      ) -> jnp.ndarray:
+    """:func:`ops.infer_window_batch_encode` over a neuron-sharded mesh.
+
+    weights shard on n; intensities u8[B, n_in], seeds and the optional
+    per-sample ``t_total`` replicate — the counter draw is stateless, so
+    every shard regenerates the SAME spikes from the same (seed, cycle)
+    keys with no cross-shard broadcast.  Bit-exact with the
+    single-device op.
+    """
+    mesh = snn_mesh() if mesh is None else mesh
+    d = mesh.shape[_AXIS]
+    n = weights.shape[0]
+    b = intensities.shape[0]
+    wp = _pad_rows(weights, d)
+    sd = jnp.broadcast_to(jnp.asarray(seeds, jnp.int32), (b,))
+    tt = (jnp.full((b,), n_steps, jnp.int32) if t_total is None
+          else jnp.asarray(t_total, jnp.int32))
+    row, rep2, rep1, out = _specs(mesh, ("neurons", "syn_words"),
+                                  (None, None), (None,), (None, "neurons"))
+
+    def call(w, x, s, t):
+        return ops.infer_window_batch_encode(
+            w, x, s, n_steps=n_steps, threshold=threshold, leak=leak,
+            t_total=t, t_chunk=t_chunk, backend=backend)
+
+    fn = shard_map(call, mesh=mesh, in_specs=(row, rep2, rep1, rep1),
+                   out_specs=out, check_rep=False)
+    return fn(wp, intensities, sd, tt)[:, :n]
+
+
+def sharded_fused_snn_window_encode(weights, intensities, seed, v,
+                                    lfsr_state, teach, *, n_steps: int,
+                                    threshold: int, leak: int, w_exp: int,
+                                    gain: int, n_syn: int,
+                                    ltp_prob: int = 1023,
+                                    train: bool = True,
+                                    t_chunk: int | None = None,
+                                    backend: str = "ref",
+                                    mesh: Mesh | None = None):
+    """:func:`ops.fused_snn_window_encode` over a neuron-sharded mesh.
+
+    State shards on n as in :func:`sharded_fused_snn_window`; the uint8
+    intensities replicate (n_in bytes instead of a T*w*4-byte window)
+    and the scalar counter seed closes over the call.  Bit-exact with
+    the single-device op, incl. each shard's LFSR sequence.
+    """
+    mesh = snn_mesh() if mesh is None else mesh
+    d = mesh.shape[_AXIS]
+    n = weights.shape[0]
+    wp = _pad_rows(weights, d)
+    vp = _pad_rows(v, d)
+    tp = _pad_rows(teach, d)
+    sp = _pad_rows(lfsr_state, d, fill=1)
+    row, vec, rep1, ras = _specs(
+        mesh, ("neurons", "syn_words"), ("neurons",), (None,),
+        (None, "neurons"))
+
+    def call(w, x, vv, st, tc):
+        return ops.fused_snn_window_encode(
+            w, x, seed, vv, st, tc, n_steps=n_steps, threshold=threshold,
+            leak=leak, w_exp=w_exp, gain=gain, n_syn=n_syn,
+            ltp_prob=ltp_prob, train=train, t_chunk=t_chunk,
+            backend=backend)
+
+    fn = shard_map(call, mesh=mesh, in_specs=(row, rep1, vec, row, vec),
+                   out_specs=(row, vec, ras, row), check_rep=False)
+    w2, v2, fired, s2 = fn(wp, intensities, vp, sp, tp)
+    return w2[:n], v2[:n], fired[:, :n], s2[:n]
+
+
+def sharded_train_window_batch_encode(weights, intensities, seeds, v,
+                                      lfsr_state, teach, *, n_steps: int,
+                                      threshold: int, leak: int,
+                                      w_exp: int, gain: int, n_syn: int,
+                                      ltp_prob=1023,
+                                      t_chunk: int | None = None,
+                                      backend: str = "ref",
+                                      mesh: Mesh | None = None):
+    """:func:`ops.train_window_batch_encode` over a neuron-sharded mesh.
+
+    Per-stream state shards on n; intensities u8[B, n_in], seeds and
+    ``ltp_prob`` replicate.  Bit-exact with the single-device op.
+    """
+    mesh = snn_mesh() if mesh is None else mesh
+    d = mesh.shape[_AXIS]
+    b, n, _ = weights.shape
+    wp = _pad_rows(weights, d, axis=1)
+    vp = _pad_rows(v, d, axis=1)
+    tp = _pad_rows(teach, d, axis=1)
+    sp = _pad_rows(lfsr_state, d, fill=1, axis=1)
+    lp = jnp.broadcast_to(jnp.asarray(ltp_prob, jnp.int32), (b,))
+    sd = jnp.broadcast_to(jnp.asarray(seeds, jnp.int32), (b,))
+    row3, vecb, rep2, rep1, ras3 = _specs(
+        mesh, (None, "neurons", "syn_words"), (None, "neurons"),
+        (None, None), (None,), (None, None, "neurons"))
+
+    def call(w, x, s, vv, st, tc, lp_):
+        return ops.train_window_batch_encode(
+            w, x, s, vv, st, tc, n_steps=n_steps, threshold=threshold,
+            leak=leak, w_exp=w_exp, gain=gain, n_syn=n_syn, ltp_prob=lp_,
+            t_chunk=t_chunk, backend=backend)
+
+    fn = shard_map(call, mesh=mesh,
+                   in_specs=(row3, rep2, rep1, vecb, row3, vecb, rep1),
+                   out_specs=(row3, vecb, ras3, row3), check_rep=False)
+    w2, v2, fired, s2 = fn(wp, intensities, sd, vp, sp, tp, lp)
+    return w2[:, :n], v2[:, :n], fired[:, :, :n], s2[:, :n]
+
+
 def _check(args) -> int:
     import numpy as np
 
@@ -215,6 +330,50 @@ def _check(args) -> int:
             np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
         print(f"fused_snn_window(train={train}): sharded == "
               f"single-device [n={n}, T={t}]")
+
+    # encode-fused paths: every shard regenerates the same spikes from
+    # the replicated intensities (stateless counter draw)
+    inten = jnp.asarray(rng.integers(0, 256, (b, w * 32), dtype=np.uint8))
+    seeds = jnp.arange(1, b + 1, dtype=jnp.int32)
+    tt = jnp.asarray([t - (i % 3) for i in range(b)], jnp.int32)
+    got = sharded_infer_window_batch_encode(
+        weights, inten, seeds, n_steps=t, threshold=60, leak=4,
+        t_total=tt, backend=args.backend, mesh=mesh)
+    want = ops.infer_window_batch_encode(
+        weights, inten, seeds, n_steps=t, threshold=60, leak=4,
+        t_total=tt, backend=args.backend)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    print(f"infer_window_batch_encode: sharded({d} devices) == "
+          f"single-device [B={b}, ragged T]")
+
+    for train in (True, False):
+        got = sharded_fused_snn_window_encode(
+            weights, inten[0], 7, v, st, teach, n_steps=t, train=train,
+            backend=args.backend, mesh=mesh, **kw)
+        want = ops.fused_snn_window_encode(
+            weights, inten[0], 7, v, st, teach, n_steps=t, train=train,
+            backend=args.backend, **kw)
+        for g, r in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+        print(f"fused_snn_window_encode(train={train}): sharded == "
+              f"single-device")
+
+    wts_b = jnp.asarray(
+        rng.integers(0, 2**32, (b, n, w), dtype=np.uint32))
+    vb = jnp.zeros((b, n), jnp.int32)
+    tb = jnp.asarray(rng.integers(-50, 50, (b, n), dtype=np.int32))
+    stb = jnp.stack([lfsr.seed(3 + i, n * w).reshape(n, w)
+                     for i in range(b)])
+    got = sharded_train_window_batch_encode(
+        wts_b, inten, seeds, vb, stb, tb, n_steps=t,
+        backend=args.backend, mesh=mesh, **kw)
+    want = ops.train_window_batch_encode(
+        wts_b, inten, seeds, vb, stb, tb, n_steps=t,
+        backend=args.backend, **kw)
+    for g, r in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+    print("train_window_batch_encode: sharded == single-device "
+          f"[B={b}]")
     print("OK")
     return 0
 

@@ -33,6 +33,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.encoder import encode_from_counter, encode_windows_host
 from repro.core.rvsnn import SnnRegFile, snn_regfile, snn_step
 from repro.core.stdp import STDPParams
 from repro.engine.plan import SNNEnginePlan
@@ -60,6 +61,32 @@ def _teach_arr(teach, v) -> jnp.ndarray:
             else teach.astype(jnp.int32))
 
 
+def _last_cycle_spikes(seeds, intensities, n_steps: int, words: int
+                       ) -> jnp.ndarray:
+    """Packed words of the window's final cycle (the spike register
+    after a presentation), regenerated in isolation from the counter."""
+    sd = jnp.asarray(seeds, jnp.uint32)
+    if intensities.ndim == 1:
+        rows = encode_from_counter(sd, intensities, 1, t0=n_steps - 1)[0]
+    else:
+        rows = jax.vmap(
+            lambda s, x: encode_from_counter(s, x, 1, t0=n_steps - 1)[0]
+        )(jnp.broadcast_to(sd, intensities.shape[:1]), intensities)
+    pad = words - rows.shape[-1]
+    if pad:
+        widths = [(0, 0)] * (rows.ndim - 1) + [(0, pad)]
+        rows = jnp.pad(rows, widths)
+    return rows
+
+
+def _one_of(windows, intensities, n_steps, what: str) -> None:
+    if (windows is None) == (intensities is None):
+        raise ValueError(f"{what}: pass exactly one of the packed "
+                         "window(s) or intensities")
+    if intensities is not None and n_steps is None:
+        raise ValueError(f"{what}: n_steps is required with intensities")
+
+
 class SNNEngine:
     """Dispatches the three verbs according to one frozen plan."""
 
@@ -69,12 +96,48 @@ class SNNEngine:
     def __repr__(self) -> str:
         return f"SNNEngine({self.plan!r})"
 
+    # --- encoding --------------------------------------------------------
+
+    def _seeds(self, seeds, b: int) -> jnp.ndarray:
+        """Per-sample counter seeds (default: plan seed + sample index)."""
+        if seeds is None:
+            return self.plan.encode_seed + jnp.arange(b, dtype=jnp.int32)
+        return jnp.broadcast_to(jnp.asarray(seeds, jnp.int32), (b,))
+
     # --- infer -----------------------------------------------------------
 
     def infer(self, weights: jnp.ndarray,
-              windows: jnp.ndarray) -> jnp.ndarray:
-        """Spike counts int32[B, n] for windows uint32[B, T, w]."""
+              windows: jnp.ndarray | None = None, *,
+              intensities: jnp.ndarray | None = None, seeds=None,
+              n_steps: int | None = None, t_total=None) -> jnp.ndarray:
+        """Spike counts int32[B, n] for B presentation windows.
+
+        Pass EITHER pre-packed ``windows`` uint32[B, T, w] OR uint8
+        ``intensities`` [B, n_in] with ``n_steps`` (and optional
+        per-sample ``seeds`` i32[B] / true lengths ``t_total`` i32[B]).
+        The intensity form encodes deterministically from the counter —
+        in VMEM when the plan says ``encode="kernel"`` (the window never
+        exists in HBM), on the host otherwise — with identical counts
+        either way.
+        """
         p = self.plan
+        if intensities is not None or windows is None:
+            _one_of(windows, intensities, n_steps, "infer")
+            seeds = self._seeds(seeds, intensities.shape[0])
+            if p.encode == "kernel":
+                if p.mesh is not None:
+                    from repro.distributed import snn_mesh
+                    return snn_mesh.sharded_infer_window_batch_encode(
+                        weights, intensities, seeds, n_steps=n_steps,
+                        threshold=p.threshold, leak=p.leak,
+                        t_total=t_total, t_chunk=p.t_chunk,
+                        backend=p.kernel_backend, mesh=p.mesh)
+                return ops.infer_window_batch_encode(
+                    weights, intensities, seeds, n_steps=n_steps,
+                    threshold=p.threshold, leak=p.leak, t_total=t_total,
+                    t_chunk=p.t_chunk, backend=p.kernel_backend)
+            windows = encode_windows_host(seeds, intensities, n_steps,
+                                    weights.shape[1], t_total)
         if p.cycle_backend == "window":
             if p.mesh is not None:
                 from repro.distributed import snn_mesh
@@ -101,14 +164,47 @@ class SNNEngine:
 
     # --- train -----------------------------------------------------------
 
-    def train(self, rf: SnnRegFile, window: jnp.ndarray,
-              teach: jnp.ndarray | None = None) -> SNNOutput:
-        """Present one uint32[T, w] window to one regfile.
+    def train(self, rf: SnnRegFile, window: jnp.ndarray | None = None,
+              teach: jnp.ndarray | None = None, *,
+              intensities: jnp.ndarray | None = None, seed=None,
+              n_steps: int | None = None) -> SNNOutput:
+        """Present one window to one regfile.
 
-        Online STDP when the plan learns (``w_exp`` set); SU idle
-        otherwise.  Returns :class:`SNNOutput`.
+        Pass EITHER a packed uint32[T, w] ``window`` OR uint8
+        ``intensities`` [n_in] with ``n_steps`` (+ optional counter
+        ``seed``; default: the plan's).  Online STDP when the plan
+        learns (``w_exp`` set); SU idle otherwise.  Returns
+        :class:`SNNOutput`.
         """
         p = self.plan
+        if intensities is not None or window is None:
+            _one_of(window, intensities, n_steps, "train")
+            seed = p.encode_seed if seed is None else seed
+            if p.encode == "kernel":
+                teach_arr = _teach_arr(teach, rf.v)
+                kwargs = p.window_kwargs()
+                if p.mesh is not None:
+                    from repro.distributed import snn_mesh
+                    w2, v2, fired, lf2 = \
+                        snn_mesh.sharded_fused_snn_window_encode(
+                            rf.weights, intensities, seed, rf.v, rf.lfsr,
+                            teach_arr, n_steps=n_steps,
+                            t_chunk=p.t_chunk,
+                            backend=p.kernel_backend, mesh=p.mesh,
+                            **kwargs)
+                else:
+                    w2, v2, fired, lf2 = ops.fused_snn_window_encode(
+                        rf.weights, intensities, seed, rf.v, rf.lfsr,
+                        teach_arr, n_steps=n_steps, t_chunk=p.t_chunk,
+                        backend=p.kernel_backend, **kwargs)
+                rf_out = rf._replace(
+                    weights=w2, v=v2, lfsr=lf2,
+                    spike=_last_cycle_spikes(seed, intensities, n_steps,
+                                             rf.weights.shape[1]))
+                counts = jnp.sum(fired.astype(jnp.int32), axis=0)
+                return SNNOutput(rf_out, counts, fired)
+            window = encode_windows_host(seed, intensities[None], n_steps,
+                                   rf.weights.shape[1])[0]
         if p.cycle_backend == "window":
             teach_arr = _teach_arr(teach, rf.v)
             kwargs = p.window_kwargs()
@@ -141,11 +237,16 @@ class SNNEngine:
 
     # --- train_batch -----------------------------------------------------
 
-    def train_batch(self, rfs: SnnRegFile, windows: jnp.ndarray,
-                    teach: jnp.ndarray, *, ltp_prob=None
+    def train_batch(self, rfs: SnnRegFile,
+                    windows: jnp.ndarray | None = None,
+                    teach: jnp.ndarray | None = None, *, ltp_prob=None,
+                    intensities: jnp.ndarray | None = None, seeds=None,
+                    n_steps: int | None = None
                     ) -> tuple[SnnRegFile, jnp.ndarray, jnp.ndarray]:
         """B independent streams, one launch: batched regfile (leading
-        stream axis), windows uint32[B, T, w], teach i32[B, n].
+        stream axis), windows uint32[B, T, w] OR intensities uint8
+        [B, n_in] + ``n_steps`` (+ per-stream counter ``seeds`` i32[B]),
+        teach i32[B, n].
 
         ``ltp_prob`` overrides the plan's shared value with a per-stream
         i32[B] vector (active-learning schedules per block).  Returns
@@ -157,6 +258,37 @@ class SNNEngine:
             raise ValueError("train_batch needs a learning plan "
                              "(w_exp is None)")
         lp = p.ltp_prob if ltp_prob is None else ltp_prob
+        teach = _teach_arr(teach, rfs.v)
+        if intensities is not None or windows is None:
+            _one_of(windows, intensities, n_steps, "train_batch")
+            seeds = self._seeds(seeds, intensities.shape[0])
+            if p.encode == "kernel":
+                kwargs = {k: v for k, v in p.window_kwargs().items()
+                          if k not in ("train", "ltp_prob")}
+                if p.mesh is not None:
+                    from repro.distributed import snn_mesh
+                    w2, v2, fired, lf2 = \
+                        snn_mesh.sharded_train_window_batch_encode(
+                            rfs.weights, intensities, seeds, rfs.v,
+                            rfs.lfsr, teach.astype(jnp.int32),
+                            ltp_prob=lp, n_steps=n_steps,
+                            t_chunk=p.t_chunk,
+                            backend=p.kernel_backend, mesh=p.mesh,
+                            **kwargs)
+                else:
+                    w2, v2, fired, lf2 = ops.train_window_batch_encode(
+                        rfs.weights, intensities, seeds, rfs.v,
+                        rfs.lfsr, teach.astype(jnp.int32), ltp_prob=lp,
+                        n_steps=n_steps, t_chunk=p.t_chunk,
+                        backend=p.kernel_backend, **kwargs)
+                rfs_out = rfs._replace(
+                    weights=w2, v=v2, lfsr=lf2,
+                    spike=_last_cycle_spikes(seeds, intensities, n_steps,
+                                             rfs.weights.shape[2]))
+                counts = jnp.sum(fired.astype(jnp.int32), axis=1)
+                return rfs_out, counts, fired
+            windows = encode_windows_host(seeds, intensities, n_steps,
+                                    rfs.weights.shape[2])
         if p.cycle_backend == "window":
             kwargs = {k: v for k, v in p.window_kwargs().items()
                       if k not in ("train", "ltp_prob")}

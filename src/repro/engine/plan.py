@@ -23,6 +23,7 @@ from repro.core.stdp import STDPParams, stdp_params
 
 _CYCLE_BACKENDS = ("window", "step")
 _KERNEL_BACKENDS = ("ref", "interp", "tpu")
+_ENCODE_BACKENDS = ("host", "kernel")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +47,13 @@ class SNNEnginePlan:
     cycle_backend: str = "window"    # "window" | "step"
     kernel_backend: str = "ref"      # "ref" | "interp" | "tpu"
     t_chunk: int | None = None       # VMEM spike-slab cycles (None = T)
+    # --- encoding --------------------------------------------------------
+    # Where intensity-driven verbs run the Poisson encode: "host" builds
+    # the packed window with encoder.encode_from_counter and feeds the
+    # pre-packed kernels; "kernel" fuses the same (bit-exact) counter
+    # draw into the window kernels, so spike windows never exist in HBM.
+    encode: str = "host"             # "host" | "kernel"
+    encode_seed: int = 0             # base counter seed for the draw
     # --- serving / placement -------------------------------------------
     max_batch: int = 8               # serving admission cap per launch
     mesh: Mesh | None = None         # neuron-axis placement (None = local)
@@ -59,6 +67,12 @@ class SNNEnginePlan:
             raise ValueError(f"kernel_backend must be one of "
                              f"{_KERNEL_BACKENDS}, got "
                              f"{self.kernel_backend!r}")
+        if self.encode not in _ENCODE_BACKENDS:
+            raise ValueError(f"encode must be one of {_ENCODE_BACKENDS}, "
+                             f"got {self.encode!r}")
+        if self.encode == "kernel" and self.cycle_backend != "window":
+            raise ValueError("in-kernel encode requires the window "
+                             "path; use cycle_backend='window'")
         if self.t_chunk is not None and self.t_chunk < 1:
             raise ValueError(f"t_chunk must be >= 1, got {self.t_chunk}")
         if self.max_batch < 1:
@@ -111,4 +125,6 @@ def plan_from_config(cfg, block_idx: int = 0,
         gain=cfg.gain, n_syn=cfg.n_inputs, ltp_prob=lp,
         cycle_backend=cfg.cycle_backend,
         kernel_backend=cfg.kernel_backend,
-        t_chunk=cfg.window_chunk, mesh=mesh)
+        t_chunk=cfg.window_chunk,
+        encode=getattr(cfg, "encode", "host"),
+        encode_seed=getattr(cfg, "encode_seed", 0), mesh=mesh)

@@ -216,6 +216,139 @@ def train_window_batch(weights, spike_trains, v, lfsr_state, teach, *,
     return (w2[:, :n, :w], v2[:, :n], f[:, :t_steps, :n], s2[:, :n, :w])
 
 
+def _intensity_words(intensities: jnp.ndarray, words: int) -> jnp.ndarray:
+    """uint8[..., n_in] -> uint32[..., 8, words] intensity words.
+
+    The encode kernels' operand layout: byte ``b`` of word ``[k, wi]``
+    is the intensity of input ``wi*32 + 4k + b`` (4 intensities per
+    uint32 lane — the whole operand is n_in bytes, the T/8x input-stream
+    saving the encode path exists for).  ``words`` is the (already
+    lane-padded) spike-word width; padding intensities are zero, so
+    padded inputs never fire.
+    """
+    x = jnp.asarray(intensities, jnp.uint32)
+    pad = words * 32 - x.shape[-1]
+    if pad < 0:
+        raise ValueError(f"{x.shape[-1]} intensities exceed the "
+                         f"{words}-word spike width ({words * 32} inputs)")
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, widths)
+    x = x.reshape(x.shape[:-1] + (words, 8, 4))
+    w = (x[..., 0]
+         | jnp.left_shift(x[..., 1], jnp.uint32(8))
+         | jnp.left_shift(x[..., 2], jnp.uint32(16))
+         | jnp.left_shift(x[..., 3], jnp.uint32(24)))
+    return jnp.swapaxes(w, -1, -2)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_steps", "threshold", "leak", "w_exp", "gain", "n_syn", "ltp_prob",
+    "train", "t_chunk", "backend"))
+def fused_snn_window_encode(weights, intensities, seed, v, lfsr_state,
+                            teach, *, n_steps: int, threshold: int,
+                            leak: int, w_exp: int, gain: int, n_syn: int,
+                            ltp_prob: int = 1023, train: bool = True,
+                            t_chunk: int | None = None,
+                            backend: str = "ref"):
+    """:func:`fused_snn_window` with the Poisson encode fused in-kernel.
+
+    intensities: uint8[n_in] (n_in <= w*32), seed: counter base (int or
+    i32 scalar).  The spike window never exists in HBM — each cycle's
+    packed row is drawn in VMEM from ``lfsr.counter_hash`` — and the
+    result is bit-exact with host-encoding
+    ``encoder.encode_from_counter(seed, intensities, n_steps)`` and
+    running the pre-packed window op, for every backend and chunking.
+    Returns (weights', v', fired bool[T, n], lfsr').
+    """
+    if backend == "ref":
+        return _ref.fused_snn_window_encode_ref(
+            weights, intensities, seed, v, lfsr_state, teach, n_steps,
+            threshold, leak, w_exp, gain, n_syn, ltp_prob, train)
+    n, w = weights.shape
+    bn = max(_block_n(max(8, n)), 8)
+    wp = _pad_state(weights, bn)
+    iw = _intensity_words(intensities, wp.shape[1])
+    vp = _pad_to(v, 0, bn)
+    tp = _pad_to(teach, 0, bn)
+    sp = _pad_state(lfsr_state, bn, fill=1)
+    w2, v2, f, s2 = _k.fused_snn_window_encode(
+        wp, iw, jnp.asarray(seed, jnp.int32), vp, sp, tp,
+        n_steps=n_steps, threshold=threshold, leak=leak, w_exp=w_exp,
+        gain=gain, n_syn=n_syn, ltp_prob=ltp_prob, train=train,
+        block_n=bn, t_chunk=t_chunk, interpret=(backend == "interp"))
+    return w2[:n, :w], v2[:n], f[:n_steps, :n], s2[:n, :w]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_steps", "threshold", "leak", "w_exp", "gain", "n_syn", "t_chunk",
+    "backend"))
+def train_window_batch_encode(weights, intensities, seeds, v, lfsr_state,
+                              teach, *, n_steps: int, threshold: int,
+                              leak: int, w_exp: int, gain: int,
+                              n_syn: int, ltp_prob=1023,
+                              t_chunk: int | None = None,
+                              backend: str = "ref"):
+    """:func:`train_window_batch` with in-kernel encode.
+
+    intensities uint8[B, n_in], seeds int | i32[B] (per-stream counter
+    bases, an SMEM scalar operand like ``ltp_prob``).  Bit-exact with
+    host-encoding each stream and running the pre-packed batch op.
+    Returns (weights', v', fired bool[B, T, n], lfsr').
+    """
+    if backend == "ref":
+        return _ref.train_window_batch_encode_ref(
+            weights, intensities, seeds, v, lfsr_state, teach, n_steps,
+            threshold, leak, w_exp, gain, n_syn, ltp_prob)
+    b, n, w = weights.shape
+    bn = max(_block_n(max(8, n)), 8)
+    wp = _pad_to(_pad_to(weights, 2, _LANES), 1, bn)
+    iw = _intensity_words(intensities, wp.shape[2])
+    vp = _pad_to(v, 1, bn)
+    tp = _pad_to(teach, 1, bn)
+    sp = _pad_to(_pad_to(lfsr_state, 2, _LANES, fill=1), 1, bn, fill=1)
+    w2, v2, f, s2 = _k.train_window_batch_encode(
+        wp, iw, seeds, vp, sp, tp, n_steps=n_steps, threshold=threshold,
+        leak=leak, w_exp=w_exp, gain=gain, n_syn=n_syn,
+        ltp_prob=ltp_prob, block_n=bn, t_chunk=t_chunk,
+        interpret=(backend == "interp"))
+    return (w2[:, :n, :w], v2[:, :n], f[:, :n_steps, :n], s2[:, :n, :w])
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "threshold",
+                                             "leak", "t_chunk", "backend"))
+def infer_window_batch_encode(weights, intensities, seeds, *,
+                              n_steps: int, threshold: int, leak: int,
+                              t_total=None, t_chunk: int | None = None,
+                              backend: str = "ref"):
+    """Intensity-resident serving: :func:`infer_window_batch` with
+    in-kernel encode and per-sample window lengths.
+
+    intensities uint8[B, n_in], seeds int | i32[B].  ``t_total``
+    (i32[B], optional) is each sample's true window length — a traced
+    SMEM operand, NOT a static — so ragged serving batches share one
+    compiled launch per (B, n_steps) bucket.  Returns counts i32[B, n];
+    bit-exact in counts with host-encode + zero-mask + pre-packed serve
+    (requires threshold >= 1, which serving enforces).
+    """
+    if backend == "ref":
+        return _ref.infer_window_batch_encode_ref(
+            weights, intensities, seeds, n_steps, threshold, leak,
+            t_total)
+    n, _ = weights.shape
+    b = intensities.shape[0]
+    bn = max(_block_n(max(8, n)), 8)
+    wp = _pad_state(weights, bn)
+    iw = _intensity_words(intensities, wp.shape[1])
+    tt = (jnp.full((b,), n_steps, jnp.int32) if t_total is None
+          else jnp.asarray(t_total, jnp.int32))
+    counts = _k.infer_window_batch_encode(
+        wp, iw, seeds, tt, n_steps=n_steps, threshold=threshold,
+        leak=leak, block_n=bn, t_chunk=t_chunk,
+        interpret=(backend == "interp"))
+    return counts[:, :n]
+
+
 @functools.partial(jax.jit, static_argnames=("threshold", "leak", "t_chunk",
                                              "backend"))
 def infer_window_batch(weights, spike_trains, *, threshold: int, leak: int,

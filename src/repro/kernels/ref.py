@@ -102,6 +102,55 @@ def train_window_batch_ref(weights, spike_trains, v, lfsr_state, teach,
     return jax.vmap(one)(weights, spike_trains, v, lfsr_state, teach, lp)
 
 
+def _host_windows(seeds, intensities, n_steps: int, words: int,
+                  t_total=None) -> jnp.ndarray:
+    """Host counter encode shaped for the kernels (the encode oracles'
+    ground truth); see :func:`repro.core.encoder.encode_windows_host`."""
+    from repro.core.encoder import encode_windows_host
+
+    return encode_windows_host(seeds, intensities, n_steps, words,
+                               t_total)
+
+
+def fused_snn_window_encode_ref(weights, intensities, seed, v, lfsr_state,
+                                teach, n_steps: int, threshold: int,
+                                leak: int, w_exp: int, gain: int,
+                                n_syn: int, ltp_prob: int,
+                                train: bool = True):
+    """Encode-fused window oracle: host-encode, then the window oracle."""
+    win = _host_windows(seed, intensities[None], n_steps,
+                        weights.shape[1])[0]
+    return fused_snn_window_ref(weights, win, v, lfsr_state, teach,
+                                threshold, leak, w_exp, gain, n_syn,
+                                ltp_prob, train)
+
+
+def train_window_batch_encode_ref(weights, intensities, seeds, v,
+                                  lfsr_state, teach, n_steps: int,
+                                  threshold: int, leak: int, w_exp: int,
+                                  gain: int, n_syn: int, ltp_prob):
+    """Encode-fused batched training oracle."""
+    wins = _host_windows(seeds, intensities, n_steps, weights.shape[2])
+    return train_window_batch_ref(weights, wins, v, lfsr_state, teach,
+                                  threshold, leak, w_exp, gain, n_syn,
+                                  ltp_prob)
+
+
+def infer_window_batch_encode_ref(weights, intensities, seeds,
+                                  n_steps: int, threshold: int,
+                                  leak: int, t_total=None):
+    """Encode-fused serving oracle (ragged lengths via ``t_total``).
+
+    Count-equality with the kernel's SMEM masking holds for any
+    ``threshold >= 1``: a zero-masked cycle adds no input counts and the
+    membrane only leaks, so it cannot fire (the kernel freezes v instead
+    of leaking it, but v is discarded here).
+    """
+    wins = _host_windows(seeds, intensities, n_steps, weights.shape[1],
+                         t_total)
+    return infer_window_batch_ref(weights, wins, threshold, leak)
+
+
 def infer_window_batch_ref(weights, spike_trains, threshold: int,
                            leak: int):
     """Serving oracle: spike counts int32[B, n], weights frozen, v reset."""

@@ -27,6 +27,18 @@ LFSR state is read back from the (still-resident) output block, and a
 ``t_total`` literal masks the zero-padded ragged tail so padded cycles
 advance no state.
 
+In-kernel encode (the ``*_encode`` kernels): the paper's on-core
+Poisson encoder (§3.1, P = x per cycle) fused into the window kernels.
+Instead of streaming a pre-packed ``uint32[T, W]`` spike window from
+HBM, the kernel takes one uint8 intensity per input (packed 4-per-word
+as ``uint32[8, W]``) plus a counter seed and draws each cycle's packed
+spike row in VMEM via the stateless ``counter_hash`` (keyed on the
+absolute cycle — no carried PRNG state, so chunked and sharded launches
+regenerate identical spikes).  Input-stream HBM traffic per sample
+drops ``T*W*4 -> 32*W`` bytes (= n_in): ~T/8x — 4x at T=32, 16x at
+T=128, 256x at T=2048 — and the serving variant reads the per-sample
+window length from SMEM, so one launch serves a ragged batch.
+
 VMEM budget (per grid step, BN=128, padded words W<=2048):
   fused step:    in + out blocks of weights and LFSR
                  ~ 4 * BN * W * 4B = 4 MiB at the 64k-synapse extreme.
@@ -38,6 +50,11 @@ VMEM budget (per grid step, BN=128, padded words W<=2048):
                  at W=2048 on a ~16 MiB v5e core.
   infer window:  one weight block (2 MiB) + spike chunk + v/count rows
                  — ~2.3 MiB per grid step at T_chunk=32.
+  train encode:  the 4 MiB of state blocks + intensity words 8 * W * 4B
+                 (64 KiB at W=2048) + the raster chunk — no spike slab
+                 at ALL, so VMEM is independent of both T and T_chunk.
+  infer encode:  one weight block + intensity words + v/count rows
+                 — ~2.07 MiB; the T-dependent VMEM term vanishes.
 
 The fused kernels are the TPU microarchitecture of the paper's
 coarse-granularity ``snn.step`` instruction: one pass through VMEM does
@@ -74,6 +91,48 @@ def _popcount_rows(words):
     """uint32[bn, w] -> int32[bn] total set bits per row."""
     return jnp.sum(jax.lax.population_count(words).astype(jnp.int32),
                    axis=-1)
+
+
+# --- in-kernel Poisson encode (bit-exact with encoder.encode_from_counter) ---
+
+def _counter_hash(seed, cycle, idx):
+    """Stateless counter draw; mirror of repro.core.lfsr.counter_hash."""
+    h = (seed + cycle * jnp.uint32(0x9E3779B9)
+         + idx * jnp.uint32(0x85EBCA6B))
+    h = jnp.bitwise_xor(h, jnp.right_shift(h, jnp.uint32(16)))
+    h = h * jnp.uint32(0x7FEB352D)
+    h = jnp.bitwise_xor(h, jnp.right_shift(h, jnp.uint32(15)))
+    h = h * jnp.uint32(0x846CA68B)
+    return jnp.bitwise_xor(h, jnp.right_shift(h, jnp.uint32(16)))
+
+
+def _encode_cycle(seed, cycle, iw):
+    """Generate one cycle's packed spike row in VMEM.
+
+    iw: uint32[8, W] intensity words — byte ``b`` of ``iw[k, wi]`` is the
+    uint8 intensity of input ``wi*32 + 4k + b`` (ops.py packs this
+    layout; 1 byte of HBM traffic per input instead of T/8 bytes of
+    pre-packed spikes).  Returns uint32[1, W]: bit ``j`` of word ``wi``
+    fires iff ``counter_hash(seed, cycle, wi*32+j) & 0xFF < intensity``
+    — bit-exact with the host oracle, and intensity 0 (incl. all
+    padding) never fires.
+    """
+    w = iw.shape[-1]
+    base_idx = jax.lax.broadcasted_iota(jnp.uint32, (1, w),
+                                        1) * jnp.uint32(32)
+    out = jnp.zeros((1, w), jnp.uint32)
+    for k in range(8):          # static: 8 intensity words x 4 bytes
+        word = iw[k][None, :]
+        for b in range(4):
+            j = 4 * k + b
+            inten = jnp.bitwise_and(
+                jnp.right_shift(word, jnp.uint32(8 * b)),
+                jnp.uint32(0xFF))
+            h = _counter_hash(seed, cycle, base_idx + jnp.uint32(j))
+            bit = (jnp.bitwise_and(h, jnp.uint32(0xFF))
+                   < inten).astype(jnp.uint32)
+            out = jnp.bitwise_or(out, jnp.left_shift(bit, jnp.uint32(j)))
+    return out
 
 
 # --- SPU: spike process -------------------------------------------------------
@@ -531,4 +590,270 @@ def infer_window_batch(weights, spike_trains, *, threshold: int,
                    pl.BlockSpec((1, block_n), lambda i, j, k: (j, i))),
         interpret=interpret,
     )(weights, spike_trains)
+    return counts
+
+
+# --- encode-fused windows: spikes generated in VMEM, never read from HBM -----
+
+def _t_grid(n_steps: int, t_chunk: int | None) -> tuple[int, int]:
+    """(effective chunk, padded cycle count) for an encode-path launch."""
+    tc = n_steps if t_chunk is None else max(1, min(t_chunk, n_steps))
+    return tc, -(-n_steps // tc) * tc
+
+
+def _window_infer_enc_kernel(threshold, leak, t_chunk, t_total,
+                             seed_ref, w_ref, iw_ref, v_ref, t_ref,
+                             vo_ref, f_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        vo_ref[...] = v_ref[...]
+
+    w = w_ref[...]
+    iw = iw_ref[...]
+    teach = t_ref[...]
+    seed = seed_ref[0, 0].astype(jnp.uint32)
+    base = k * t_chunk
+    masked = t_total % t_chunk != 0
+
+    def cycle(t, v):
+        pre = _encode_cycle(seed, (base + t).astype(jnp.uint32), iw)
+        v_int = v + _popcount_rows(jnp.bitwise_and(pre, w)) + teach
+        fired = v_int >= threshold
+        v_next = jnp.where(
+            fired, jnp.int32(0), jnp.maximum(v_int - leak, jnp.int32(0)))
+        if masked:
+            active = base + t < t_total
+            fired = jnp.logical_and(fired, active)
+            v_next = jnp.where(active, v_next, v)
+        pl.store(f_ref, (pl.dslice(t, 1), slice(None)), fired[None, :])
+        return v_next
+
+    vo_ref[...] = jax.lax.fori_loop(0, t_chunk, cycle, vo_ref[...])
+
+
+def _infer_window_enc_kernel(threshold, leak, t_chunk,
+                             seed_ref, tt_ref, w_ref, iw_ref,
+                             o_ref, vo_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        vo_ref[...] = jnp.zeros_like(vo_ref)
+
+    w = w_ref[...]
+    iw = iw_ref[...][0]
+    seed = seed_ref[0, 0].astype(jnp.uint32)
+    # per-SAMPLE window length from SMEM (not a literal): one launch
+    # serves a ragged batch, masking each stream past its own t_total
+    tt = tt_ref[0, 0]
+    base = k * t_chunk
+
+    def cycle(t, carry):
+        v, acc = carry
+        pre = _encode_cycle(seed, (base + t).astype(jnp.uint32), iw)
+        v_int = v + _popcount_rows(jnp.bitwise_and(pre, w))
+        fired = v_int >= threshold
+        v_next = jnp.where(
+            fired, jnp.int32(0), jnp.maximum(v_int - leak, jnp.int32(0)))
+        active = base + t < tt
+        fired = jnp.logical_and(fired, active)
+        v_next = jnp.where(active, v_next, v)
+        return v_next, acc + fired.astype(jnp.int32)
+
+    v, acc = jax.lax.fori_loop(
+        0, t_chunk, cycle, (vo_ref[...][0], o_ref[...][0]))
+    o_ref[...] = acc[None, :]
+    vo_ref[...] = v[None, :]
+
+
+def _train_window_enc_kernel(threshold, leak, w_exp, gain, n_syn,
+                             t_chunk, t_total,
+                             lp_ref, seed_ref, w_ref, iw_ref, v_ref,
+                             st_ref, t_ref,
+                             wo_ref, vo_ref, f_ref, sto_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        wo_ref[...] = w_ref[...]
+        vo_ref[...] = v_ref[...]
+        sto_ref[...] = st_ref[...]
+
+    ltp_prob = lp_ref[0, 0]
+    seed = seed_ref[0, 0].astype(jnp.uint32)
+    iw = iw_ref[...][0]
+    teach = t_ref[...][0]
+    base = k * t_chunk
+    masked = t_total % t_chunk != 0
+
+    def cycle(t, carry):
+        w, v, st = carry
+        pre = _encode_cycle(seed, (base + t).astype(jnp.uint32), iw)
+        counts = _popcount_rows(jnp.bitwise_and(pre, w)) + teach
+        v_int = v + counts
+        fired = v_int >= threshold
+        v_next = jnp.where(
+            fired, jnp.int32(0), jnp.maximum(v_int - leak, jnp.int32(0)))
+        if masked:
+            active = base + t < t_total
+            fired = jnp.logical_and(fired, active)
+            v_next = jnp.where(active, v_next, v)
+        pl.store(f_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 fired[None, None, :])
+        # padded cycles: masked `fired` gates STDP (see train kernel)
+        w, st = _stdp_body(w, pre, fired, st, w_exp=w_exp, gain=gain,
+                           n_syn=n_syn, ltp_prob=ltp_prob)
+        return w, v_next, st
+
+    w, v, st = jax.lax.fori_loop(
+        0, t_chunk, cycle,
+        (wo_ref[...][0], vo_ref[...][0], sto_ref[...][0]))
+    wo_ref[...] = w[None]
+    vo_ref[...] = v[None]
+    sto_ref[...] = st[None]
+
+
+def train_window_batch_encode(weights, intens_words, seeds, v, lfsr_state,
+                              teach, *, n_steps: int, threshold: int,
+                              leak: int, w_exp: int, gain: int,
+                              n_syn: int, ltp_prob, block_n=128,
+                              t_chunk: int | None = None, interpret=False):
+    """B training streams whose spike windows are generated in VMEM.
+
+    Same grid/carry scheme as :func:`train_window_batch`, but the spike
+    slab operand is replaced by intensity words u32[B, 8, w] (byte
+    layout of :func:`_encode_cycle`) plus per-stream counter seeds
+    i32[B] — each cycle's packed row is drawn on the fly, so the input
+    stream shrinks from ``T*w*4`` to ``n_in`` bytes per stream and the
+    draw is identical across chunkings (the hash is keyed on the
+    absolute cycle).  Bit-exact with :func:`train_window_batch` fed the
+    ``encoder.encode_from_counter`` host windows.
+
+    Returns (weights', v', fired bool[B, T_pad, n], lfsr') with T_pad =
+    n_steps rounded up to the chunk (callers slice to n_steps).
+    """
+    b, n, w = weights.shape
+    tc, t_pad = _t_grid(n_steps, t_chunk)
+    lp = jnp.asarray(ltp_prob, jnp.int32)
+    if lp.ndim == 0:
+        lp = jnp.broadcast_to(lp, (b,))
+    sd = jnp.broadcast_to(jnp.asarray(seeds, jnp.int32), (b,))
+    kern = functools.partial(_train_window_enc_kernel, int(threshold),
+                             int(leak), w_exp, gain, n_syn, tc,
+                             int(n_steps))
+    return pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((b, n, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((b, n), jnp.int32),
+                   jax.ShapeDtypeStruct((b, t_pad, n), jnp.bool_),
+                   jax.ShapeDtypeStruct((b, n, w), jnp.uint32)),
+        grid=(n // block_n, b, t_pad // tc),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (j, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j, k: (j, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_n, w), lambda i, j, k: (j, i, 0)),
+            pl.BlockSpec((1, 8, w), lambda i, j, k: (j, 0, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (j, i)),
+            pl.BlockSpec((1, block_n, w), lambda i, j, k: (j, i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (j, i)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, block_n, w), lambda i, j, k: (j, i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (j, i)),
+            pl.BlockSpec((1, tc, block_n), lambda i, j, k: (j, k, i)),
+            pl.BlockSpec((1, block_n, w), lambda i, j, k: (j, i, 0)),
+        ),
+        interpret=interpret,
+    )(lp[:, None], sd[:, None], weights, intens_words, v, lfsr_state,
+      teach)
+
+
+def fused_snn_window_encode(weights, intens_words, seed, v, lfsr_state,
+                            teach, *, n_steps: int, threshold: int,
+                            leak: int, w_exp: int, gain: int, n_syn: int,
+                            ltp_prob: int, train: bool = True,
+                            block_n=128, t_chunk: int | None = None,
+                            interpret=False):
+    """One stream, T cycles, spikes generated in VMEM (B=1 of the
+    batched encode grid; ``train=False`` uses a read-only variant as in
+    :func:`fused_snn_window`).
+
+    intens_words u32[8, w], seed i32 scalar.  Returns
+    (weights', v', fired bool[T_pad, n], lfsr').
+    """
+    n, w = weights.shape
+    tc, t_pad = _t_grid(n_steps, t_chunk)
+    if not train:
+        sd = jnp.reshape(jnp.asarray(seed, jnp.int32), (1, 1))
+        v2, fired = pl.pallas_call(
+            functools.partial(_window_infer_enc_kernel, int(threshold),
+                              int(leak), tc, int(n_steps)),
+            out_shape=(jax.ShapeDtypeStruct((n,), jnp.int32),
+                       jax.ShapeDtypeStruct((t_pad, n), jnp.bool_)),
+            grid=(n // block_n, t_pad // tc),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda i, k: (0, 0),
+                             memory_space=pltpu.SMEM),
+                pl.BlockSpec((block_n, w), lambda i, k: (i, 0)),
+                pl.BlockSpec((8, w), lambda i, k: (0, 0)),
+                pl.BlockSpec((block_n,), lambda i, k: (i,)),
+                pl.BlockSpec((block_n,), lambda i, k: (i,)),
+            ],
+            out_specs=(pl.BlockSpec((block_n,), lambda i, k: (i,)),
+                       pl.BlockSpec((tc, block_n), lambda i, k: (k, i))),
+            interpret=interpret,
+        )(sd, weights, intens_words, v, teach)
+        return weights, v2, fired, lfsr_state
+    w2, v2, fired, s2 = train_window_batch_encode(
+        weights[None], intens_words[None], jnp.asarray(seed, jnp.int32),
+        v[None], lfsr_state[None], teach[None], n_steps=n_steps,
+        threshold=threshold, leak=leak, w_exp=w_exp, gain=gain,
+        n_syn=n_syn, ltp_prob=ltp_prob, block_n=block_n, t_chunk=tc,
+        interpret=interpret)
+    return w2[0], v2[0], fired[0], s2[0]
+
+
+def infer_window_batch_encode(weights, intens_words, seeds, t_totals, *,
+                              n_steps: int, threshold: int, leak: int,
+                              block_n=128, t_chunk: int | None = None,
+                              interpret=False):
+    """Serving kernel, intensity-resident: B windows generated in VMEM.
+
+    intens_words u32[B, 8, w], seeds i32[B], t_totals i32[B] — the
+    per-sample window length is an SMEM scalar (NOT a literal), so one
+    launch serves a ragged batch: stream j's cycles at or past
+    ``t_totals[j]`` store no spikes and advance no state.  Zero-intensity
+    batch padding is silent by construction.  Bit-exact with
+    :func:`infer_window_batch` fed host-encoded (and zero-masked)
+    windows.  Returns spike counts int32[B, n].
+    """
+    n, w = weights.shape
+    b = intens_words.shape[0]
+    tc, t_pad = _t_grid(n_steps, t_chunk)
+    sd = jnp.broadcast_to(jnp.asarray(seeds, jnp.int32), (b,))
+    tt = jnp.broadcast_to(jnp.asarray(t_totals, jnp.int32), (b,))
+    kern = functools.partial(_infer_window_enc_kernel, int(threshold),
+                             int(leak), tc)
+    counts, _ = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((b, n), jnp.int32),
+                   jax.ShapeDtypeStruct((b, n), jnp.int32)),
+        grid=(n // block_n, b, t_pad // tc),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (j, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j, k: (j, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_n, w), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, 8, w), lambda i, j, k: (j, 0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, block_n), lambda i, j, k: (j, i)),
+                   pl.BlockSpec((1, block_n), lambda i, j, k: (j, i))),
+        interpret=interpret,
+    )(sd[:, None], tt[:, None], weights, intens_words)
     return counts

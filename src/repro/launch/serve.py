@@ -25,38 +25,44 @@ def make_prefill_step(model: Model, max_len: int):
 
 
 def _serve_snn(args) -> None:
-    """SNN serving demo: Poisson-encoded digit windows through the
+    """SNN serving demo: intensity-resident digit requests through the
     dynamic-window-batching :class:`SNNServingEngine` (ragged T's to
-    exercise the padding path)."""
+    exercise the padding path; ``--encode kernel`` draws the spike
+    windows in VMEM, so they never exist in HBM)."""
     import dataclasses
 
-    import jax
     import numpy as np
 
     from repro.configs.wenquxing_snn import WENQUXING_22A
-    from repro.core.encoder import poisson_encode_batch
+    from repro.core.encoder import quantize_intensities
     from repro.core.stdp import init_weights
     from repro.data.digits import make_digits
     from repro.engine import plan_from_config
     from repro.serving import SNNRequest, SNNServingEngine
 
-    cfg = dataclasses.replace(WENQUXING_22A, n_steps=24)
+    cfg = dataclasses.replace(WENQUXING_22A, n_steps=24,
+                              encode=args.encode)
     plan = dataclasses.replace(plan_from_config(cfg),
                                max_batch=args.slots)
     weights = init_weights(cfg.n_neurons, cfg.words, dense=True)
     neuron_class = np.tile(np.arange(cfg.n_classes), cfg.n_blocks)
     imgs, _ = make_digits(args.requests, seed=0)
+    inten = np.asarray(quantize_intensities(imgs))
     reqs = []
     for i in range(args.requests):
         t_i = cfg.n_steps - 4 * (i % 3)     # ragged window lengths
-        win = poisson_encode_batch(jax.random.key(1000 + i),
-                                   imgs[i][None], t_i)[0]
-        reqs.append(SNNRequest(rid=i, window=np.asarray(win)))
+        reqs.append(SNNRequest(rid=i, intensities=inten[i],
+                               n_steps=t_i))
     eng = SNNServingEngine(weights, plan, neuron_class=neuron_class)
     eng.run(reqs)
     print(f"wenquxing-snn: {sum(r.done for r in reqs)}/{len(reqs)} done, "
           f"{eng.windows_served} windows in {eng.batches} batches "
-          f"(max_batch={plan.max_batch})")
+          f"(max_batch={plan.max_batch}, encode={plan.encode})")
+    if args.bench:
+        stats = eng.stats()
+        stats["padded_slot_waste"] = round(stats["padded_slot_waste"], 4)
+        print("serve-bench: " + " ".join(
+            f"{k}={v}" for k, v in sorted(stats.items())))
 
 
 def main() -> None:
@@ -82,6 +88,12 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--encode", default="kernel",
+                    choices=["host", "kernel"],
+                    help="SNN encode placement (wenquxing-snn only)")
+    ap.add_argument("--bench", action="store_true",
+                    help="print serving stats (padded-slot waste, "
+                         "per-step wall-clock) after the run")
     args = ap.parse_args()
 
     if args.arch == "wenquxing-snn":

@@ -4,30 +4,45 @@ The transformer path batches decode steps over KV-cache slots
 (:mod:`repro.serving.engine`); the SNN path batches whole presentation
 windows.  :class:`SNNServingEngine` keeps a request queue and, per
 engine step, admits up to ``plan.max_batch`` requests, pads their
-(possibly ragged) windows into one uint32[B, T, w] batch, and serves
-them with a single :meth:`SNNEngine.infer` launch — sharded over the
-plan's neuron mesh when one is present, so population-sharded serving
-and request batching compose.
+(possibly ragged) windows into one batch, and serves them with a single
+:meth:`SNNEngine.infer` launch — sharded over the plan's neuron mesh
+when one is present, so population-sharded serving and request batching
+compose.
+
+Requests come in two shapes:
+
+* **pre-packed**: a ``uint32[T, w]`` spike window (the original form);
+* **intensity**: ``uint8[n_in]`` pixel intensities + ``n_steps`` (+ an
+  optional counter ``seed``, default derived from the request id).  The
+  queue then holds ``n_in`` bytes instead of ``T*w*4`` (~T/8x smaller),
+  and when the plan says ``encode="kernel"`` the spike window *never*
+  exists — the serve launch draws it in VMEM from the counter hash.
+  Both placements are bit-exact with ``encoder.encode_from_counter``,
+  so mixed batches (host-encoded on admission) return identical counts.
 
 Ragged batching is bit-exact by construction: windows are zero-padded on
 the time axis, and a zero spike row adds no input counts while the
 membrane only leaks — with ``threshold >= 1`` a neuron that did not fire
 in the true window cannot fire in a padded cycle (after any cycle
 ``v < threshold``), so padded cycles contribute no spikes.  The batch
-axis is likewise padded with all-zero windows (their counts are
-discarded), which pins the launch shape to ``(max_batch, T_q, w)`` with
-``T_q`` rounded up to the time quantum — one compile per window-length
-bucket instead of one per ragged batch shape.
+axis is likewise padded (zero windows / zero intensities — silent by the
+same argument), which pins the launch shape to ``(max_batch, T_q, ...)``
+with ``T_q`` rounded up to the time quantum — one compile per
+window-length bucket instead of one per ragged batch shape.  The
+intensity path additionally carries each sample's true length as a
+traced SMEM operand, so raggedness itself never retraces.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.encoder import encode_from_counter
 from repro.engine import SNNEngine, SNNEnginePlan
 
 _T_QUANTUM = 8   # window lengths bucket to multiples of this (or t_chunk)
@@ -35,11 +50,14 @@ _T_QUANTUM = 8   # window lengths bucket to multiples of this (or t_chunk)
 
 @dataclasses.dataclass
 class SNNRequest:
-    """One classification request: a packed spike window in, counts out."""
+    """One classification request: spikes (or intensities) in, counts out."""
     rid: int
-    window: np.ndarray               # uint32[T, w] packed spike window
-    counts: np.ndarray | None = None  # int32[n] spike counts (result)
-    pred: int | None = None           # argmax class (if classes known)
+    window: np.ndarray | None = None   # uint32[T, w] packed spike window
+    intensities: np.ndarray | None = None  # uint8[n_in] (with n_steps)
+    n_steps: int | None = None         # presentation length (intensity form)
+    seed: int | None = None            # counter seed (default: from rid)
+    counts: np.ndarray | None = None   # int32[n] spike counts (result)
+    pred: int | None = None            # argmax class (if classes known)
     done: bool = False
 
 
@@ -48,8 +66,9 @@ class SNNServingEngine:
 
     weights: uint32[n, w] frozen population weights; ``neuron_class``
     (int[n], optional) maps the maximally-firing neuron to a class label
-    for ``req.pred``.  Admission, padding and launch shape come from the
-    plan (``max_batch``, ``t_chunk``, placement).
+    for ``req.pred``.  Admission, padding, encode placement and launch
+    shape come from the plan (``max_batch``, ``t_chunk``, ``encode``,
+    placement).
     """
 
     def __init__(self, weights, plan: SNNEnginePlan, *,
@@ -62,27 +81,85 @@ class SNNServingEngine:
         self.neuron_class = (None if neuron_class is None
                              else np.asarray(neuron_class))
         self.words = int(self.weights.shape[1])
+        self.n_inputs = self.words * 32
         self.queue: deque[SNNRequest] = deque()
         self.steps = 0
         self.batches = 0
         self.windows_served = 0
+        self.slots_offered = 0      # max_batch per launch
+        self.slots_padded = 0       # offered - admitted (batch-pad waste)
+        self.step_seconds = 0.0     # total serve wall-clock
+        self.last_step_seconds = 0.0
 
     # --- admission -----------------------------------------------------
 
     def submit(self, req: SNNRequest) -> None:
-        window = np.asarray(req.window, np.uint32)
-        if window.ndim != 2 or window.shape[1] != self.words:
-            raise ValueError(f"request {req.rid}: window must be "
-                             f"uint32[T, {self.words}], got "
-                             f"{window.shape}")
-        req.window = window
+        if (req.window is None) == (req.intensities is None):
+            raise ValueError(f"request {req.rid}: provide exactly one "
+                             "of window / intensities")
+        if req.window is not None:
+            window = np.asarray(req.window, np.uint32)
+            if window.ndim != 2 or window.shape[1] != self.words:
+                raise ValueError(f"request {req.rid}: window must be "
+                                 f"uint32[T, {self.words}], got "
+                                 f"{window.shape}")
+            req.window = window
+        else:
+            inten = np.asarray(req.intensities, np.uint8)
+            if inten.ndim != 1 or inten.shape[0] > self.n_inputs:
+                raise ValueError(f"request {req.rid}: intensities must "
+                                 f"be uint8[<= {self.n_inputs}], got "
+                                 f"{inten.shape}")
+            if req.n_steps is None or req.n_steps < 1:
+                raise ValueError(f"request {req.rid}: intensity "
+                                 "requests need n_steps >= 1")
+            req.intensities = inten
+            if req.seed is None:
+                req.seed = self.engine.plan.encode_seed + req.rid
         self.queue.append(req)
 
     def _t_quantum(self) -> int:
         tc = self.engine.plan.t_chunk
         return tc if tc is not None else _T_QUANTUM
 
+    @staticmethod
+    def _t_len(req: SNNRequest) -> int:
+        return (req.window.shape[0] if req.window is not None
+                else req.n_steps)
+
     # --- serve ---------------------------------------------------------
+
+    def _serve_intensities(self, batch, t_pad: int) -> np.ndarray:
+        """One in-kernel-encode launch: uint8 intensities + ragged
+        lengths in, counts out; the batch tail pads with zero intensity
+        (silent) and t_total=0."""
+        plan = self.engine.plan
+        inten = np.zeros((plan.max_batch, self.n_inputs), np.uint8)
+        seeds = np.zeros((plan.max_batch,), np.int32)
+        t_total = np.zeros((plan.max_batch,), np.int32)
+        for i, r in enumerate(batch):
+            inten[i, :r.intensities.shape[0]] = r.intensities
+            seeds[i] = r.seed
+            t_total[i] = r.n_steps
+        return np.asarray(self.engine.infer(
+            self.weights, intensities=jnp.asarray(inten),
+            seeds=jnp.asarray(seeds), n_steps=t_pad,
+            t_total=jnp.asarray(t_total)))
+
+    def _serve_windows(self, batch, t_pad: int) -> np.ndarray:
+        """One pre-packed launch; intensity requests in a mixed batch
+        are host-encoded here (bit-exact with the kernel draw)."""
+        plan = self.engine.plan
+        stacked = np.zeros((plan.max_batch, t_pad, self.words),
+                           np.uint32)
+        for i, r in enumerate(batch):
+            win = r.window
+            if win is None:
+                win = np.asarray(encode_from_counter(
+                    r.seed, jnp.asarray(r.intensities), r.n_steps))
+            stacked[i, :win.shape[0], :win.shape[1]] = win
+        return np.asarray(
+            self.engine.infer(self.weights, jnp.asarray(stacked)))
 
     def step(self) -> int:
         """Admit + serve one batch.  Returns requests completed."""
@@ -92,23 +169,28 @@ class SNNServingEngine:
             batch.append(self.queue.popleft())
         if not batch:
             return 0
+        t0 = time.perf_counter()
         q = self._t_quantum()
-        t_max = max(r.window.shape[0] for r in batch)
-        t_pad = -(-t_max // q) * q
-        stacked = np.zeros((plan.max_batch, t_pad, self.words),
-                           np.uint32)
-        for i, r in enumerate(batch):
-            stacked[i, :r.window.shape[0]] = r.window
-        counts = np.asarray(
-            self.engine.infer(self.weights, jnp.asarray(stacked)))
+        t_pad = -(-max(self._t_len(r) for r in batch) // q) * q
+        intensity_only = all(r.window is None for r in batch)
+        if (intensity_only and plan.encode == "kernel"
+                and plan.cycle_backend == "window"):
+            counts = self._serve_intensities(batch, t_pad)
+        else:
+            counts = self._serve_windows(batch, t_pad)
         for i, r in enumerate(batch):
             r.counts = counts[i]
             if self.neuron_class is not None:
                 r.pred = int(self.neuron_class[int(np.argmax(counts[i]))])
             r.done = True
+        dt = time.perf_counter() - t0
         self.steps += 1
         self.batches += 1
         self.windows_served += len(batch)
+        self.slots_offered += plan.max_batch
+        self.slots_padded += plan.max_batch - len(batch)
+        self.step_seconds += dt
+        self.last_step_seconds = dt
         return len(batch)
 
     def run(self, requests: list[SNNRequest], max_steps: int = 10_000
@@ -121,3 +203,23 @@ class SNNServingEngine:
                 break
             steps += 1
         return requests
+
+    # --- stats ---------------------------------------------------------
+
+    @property
+    def padded_slot_waste(self) -> float:
+        """Fraction of offered batch slots burned on zero padding."""
+        if self.slots_offered == 0:
+            return 0.0
+        return self.slots_padded / self.slots_offered
+
+    def stats(self) -> dict:
+        """Serving counters for the ``--bench`` report."""
+        return {
+            "windows_served": self.windows_served,
+            "batches": self.batches,
+            "padded_slot_waste": self.padded_slot_waste,
+            "mean_step_ms": round(
+                1e3 * self.step_seconds / max(self.batches, 1), 3),
+            "last_step_ms": round(1e3 * self.last_step_seconds, 3),
+        }

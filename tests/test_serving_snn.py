@@ -107,6 +107,140 @@ def test_serving_requires_positive_threshold():
                          SNNEnginePlan(threshold=0, w_exp=None))
 
 
+def _intensity_request(rid, t_steps, n_in=70, seed=None):
+    rng = np.random.default_rng(300 + rid)
+    return SNNRequest(rid=rid, intensities=rng.integers(
+        0, 256, (n_in,), dtype=np.uint8), n_steps=t_steps, seed=seed)
+
+
+@pytest.mark.parametrize("encode", ["host", "kernel"])
+def test_intensity_requests_match_prepacked_oracle_windows(encode):
+    """An intensity request returns exactly the counts of a pre-packed
+    request carrying its encode_from_counter window — for both encode
+    placements (the in-kernel draw is bit-exact with the host oracle)."""
+    import dataclasses
+
+    from repro.core.encoder import encode_from_counter
+
+    weights = _weights(5)
+    plan = dataclasses.replace(PLAN, encode=encode)
+    reqs_i = [_intensity_request(i, 10 - 3 * (i % 3)) for i in range(5)]
+    reqs_w = []
+    for r in reqs_i:
+        win = np.asarray(encode_from_counter(
+            plan.encode_seed + r.rid, jnp.asarray(r.intensities),
+            r.n_steps))
+        win = np.pad(win, ((0, 0), (0, W - win.shape[1])))
+        reqs_w.append(SNNRequest(rid=r.rid, window=win))
+    SNNServingEngine(weights, plan).run(reqs_i)
+    SNNServingEngine(weights, PLAN).run(reqs_w)
+    for a, b in zip(reqs_i, reqs_w):
+        np.testing.assert_array_equal(a.counts, b.counts)
+
+
+def test_mixed_batch_serves_both_request_kinds():
+    """Pre-packed and intensity requests in ONE batch agree with
+    serving each kind alone (mixed batches host-encode, bit-exactly)."""
+    import dataclasses
+
+    weights = _weights(6)
+    plan = dataclasses.replace(PLAN, encode="kernel")
+    mixed = [_request(0, 9), _intensity_request(1, 9), _request(2, 9)]
+    alone = [_request(0, 9), _intensity_request(1, 9), _request(2, 9)]
+    eng = SNNServingEngine(weights, plan)
+    eng.run(mixed)
+    assert eng.batches == 1
+    for r in alone:
+        SNNServingEngine(weights, plan).run([r])
+    for a, b in zip(mixed, alone):
+        np.testing.assert_array_equal(a.counts, b.counts)
+
+
+def test_sharded_intensity_serving_matches_unsharded():
+    import dataclasses
+
+    weights = _weights(7)
+    plan_k = dataclasses.replace(PLAN, encode="kernel")
+    plan_m = dataclasses.replace(plan_k, mesh=snn_mesh.snn_mesh())
+    reqs_a = [_intensity_request(i, 10) for i in range(4)]
+    reqs_b = [_intensity_request(i, 10) for i in range(4)]
+    SNNServingEngine(weights, plan_k).run(reqs_a)
+    SNNServingEngine(weights, plan_m).run(reqs_b)
+    for a, b in zip(reqs_a, reqs_b):
+        np.testing.assert_array_equal(a.counts, b.counts)
+
+
+def test_submit_validates_intensity_requests():
+    eng = SNNServingEngine(_weights(), PLAN)
+    with pytest.raises(ValueError):        # both forms
+        eng.submit(SNNRequest(rid=0, window=np.zeros((4, W), np.uint32),
+                              intensities=np.zeros(8, np.uint8),
+                              n_steps=4))
+    with pytest.raises(ValueError):        # neither form
+        eng.submit(SNNRequest(rid=1))
+    with pytest.raises(ValueError):        # missing n_steps
+        eng.submit(SNNRequest(rid=2, intensities=np.zeros(8, np.uint8)))
+    with pytest.raises(ValueError):        # too many inputs
+        eng.submit(SNNRequest(rid=3, n_steps=4, intensities=np.zeros(
+            W * 32 + 1, np.uint8)))
+
+
+def test_serving_stats_track_waste_and_step_time():
+    eng = SNNServingEngine(_weights(8), PLAN)
+    eng.run([_request(i, 10) for i in range(4)])   # batches of 3 + 1
+    stats = eng.stats()
+    assert stats["batches"] == 2
+    assert stats["windows_served"] == 4
+    # second batch padded 2 of 3 slots -> 2/6 waste
+    assert stats["padded_slot_waste"] == pytest.approx(2 / 6)
+    assert stats["mean_step_ms"] > 0
+    assert stats["last_step_ms"] >= 0
+    assert eng.padded_slot_waste == pytest.approx(2 / 6)
+
+
+@pytest.mark.parametrize("encode", ["host", "kernel"])
+def test_one_jit_trace_per_window_length_bucket(encode):
+    """Ragged batches retrace ONLY per window-length bucket (the jax
+    trace counter of the dispatched op), for both admission kinds."""
+    import dataclasses
+
+    weights = _weights(9)
+    plan = dataclasses.replace(PLAN, encode=encode)
+
+    def deltas(serve):
+        pp0 = ops.infer_window_batch._cache_size()
+        enc0 = ops.infer_window_batch_encode._cache_size()
+        serve()
+        return (ops.infer_window_batch._cache_size() - pp0,
+                ops.infer_window_batch_encode._cache_size() - enc0)
+
+    # pre-packed admission: T in {5..9} buckets to 8, {11, 12} to 16 —
+    # at most one trace per bucket, then ZERO retraces for new ragged
+    # lengths inside already-seen buckets
+    eng = SNNServingEngine(weights, plan)
+    pp, enc = deltas(lambda: [eng.run([_request(100 + t, t)])
+                              for t in (5, 7, 12)])
+    assert pp <= 2 and enc == 0
+    pp, enc = deltas(lambda: [eng.run([_request(120 + t, t)])
+                              for t in (6, 8, 3, 11)])
+    assert (pp, enc) == (0, 0)
+
+    # intensity admission: kernel encode dispatches the encode op (the
+    # ragged t_total is a traced SMEM operand, so raggedness inside a
+    # bucket never retraces); host encode feeds the pre-packed op whose
+    # buckets are warm from above
+    eng2 = SNNServingEngine(weights, plan)
+    pp, enc = deltas(lambda: [eng2.run([_intensity_request(200 + t, t)])
+                              for t in (5, 7, 12)])
+    if encode == "kernel":
+        assert pp == 0 and enc <= 2
+    else:
+        assert (pp, enc) == (0, 0)
+    pp, enc = deltas(lambda: [eng2.run([_intensity_request(220 + t, t)])
+                              for t in (6, 8, 3, 11)])
+    assert (pp, enc) == (0, 0)
+
+
 def test_launch_serve_snn_cli_completes_requests():
     """Acceptance: repro.launch.serve --arch wenquxing-snn --requests 6
     completes every request through SNNServingEngine."""
@@ -115,7 +249,10 @@ def test_launch_serve_snn_cli_completes_requests():
                          + os.pathsep + env.get("PYTHONPATH", ""))
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve", "--arch",
-         "wenquxing-snn", "--requests", "6"],
+         "wenquxing-snn", "--requests", "6", "--bench"],
         env=env, capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "wenquxing-snn: 6/6 done" in proc.stdout
+    assert "serve-bench:" in proc.stdout
+    assert "padded_slot_waste=" in proc.stdout
+    assert "mean_step_ms=" in proc.stdout
