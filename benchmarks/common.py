@@ -44,9 +44,20 @@ def time_fn(fn, *args, reps=10, warmup=2):
     return float(np.median(ts) * 1e6)
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
-    print(f"{name},{us_per_call:.2f},{derived}")
-    rec: dict = {"name": name, "us_per_call": float(us_per_call)}
+def emit(name: str, us_per_call: float | None, derived: str) -> None:
+    """Print one CSV row and record it for --json.
+
+    ``us_per_call=None`` marks an analytic-only row (derived metrics
+    with nothing timed): the timing field is left empty and the record
+    carries ``analytic: true`` instead of a bogus 0.0 that the perf
+    gate or history plots could mistake for a measurement.
+    """
+    if us_per_call is None:
+        print(f"{name},,{derived};analytic=true")
+        rec: dict = {"name": name, "analytic": True}
+    else:
+        print(f"{name},{us_per_call:.2f},{derived}")
+        rec = {"name": name, "us_per_call": float(us_per_call)}
     for part in derived.split(";"):
         if "=" not in part:
             continue

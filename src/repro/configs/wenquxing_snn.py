@@ -31,3 +31,18 @@ VARIANTS = {
     n: dataclasses.replace(WENQUXING_22A, n_neurons=n)
     for n in (10, 20, 40)
 }
+
+# Intensity-resident ingestion: the dataset stays uint8[N, 784] and the
+# window kernels draw each cycle's spikes in VMEM from per-sample
+# counter-hash seeds — no N×T×w spike tensor (T*w*4 -> n_in
+# bytes/sample, ~T/8x).
+WENQUXING_22A_INTENSITY = dataclasses.replace(
+    WENQUXING_22A, encode="kernel", encode_seed=0x22A)
+
+# Cluster-scale training sweep: all blocks train concurrently as one
+# batched grid per presented sample, sharded over a 2-D (data × neuron)
+# mesh — block streams over "data", neuron rows over "neurons".  Any
+# (data, neurons) factorization is bit-exact with the local run; (2, 4)
+# matches the 8-device host mesh CI forces.
+WENQUXING_22A_MESH2D = dataclasses.replace(
+    WENQUXING_22A_INTENSITY, train_mode="parallel", mesh_shape=(2, 4))

@@ -77,6 +77,23 @@ def encode_from_counter(seed, intensities: jnp.ndarray, n_steps: int,
     return pack(bits)
 
 
+def sample_seeds(base, n: int) -> jnp.ndarray:
+    """Per-sample counter seeds i32[n] derived from one base seed.
+
+    One :func:`lfsr.counter_hash` draw per sample index (cycle axis =
+    sample, lane axis 0), so consecutive samples get decorrelated seed
+    values rather than consecutive integers.  Device-independent and
+    stateless — any shard, chunk or epoch regenerates sample i's seed
+    (and therefore its whole spike window) from (base, i) alone, which
+    is what keeps every (data, neurons) mesh factorization bit-exact.
+    The int32 cast is a wrapping bit-cast; the encode path reads the
+    seeds back as uint32.
+    """
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    return lfsr.counter_hash(jnp.asarray(base, jnp.uint32), idx,
+                             jnp.uint32(0)).astype(jnp.int32)
+
+
 def encode_from_counter_batch(seeds, intensities: jnp.ndarray,
                               n_steps: int) -> jnp.ndarray:
     """Per-sample-seeded counter encode: uint8[B, n] -> uint32[B, T, w].

@@ -18,6 +18,21 @@ as a per-stream SMEM scalar operand, so block 0 trains at the base
 ``ltp_prob`` while blocks >= 1 keep the faster ``ltp_prob_active``
 schedule, exactly as in active mode.
 
+Ingestion is intensity-resident when ``encode="kernel"``: the dataset
+is quantized ONCE to uint8[N, n_inputs] and stays that way — per-sample
+seeds come from the counter hash (:func:`encoder.sample_seeds`) and
+every presentation draws its spike window inside the window kernel, so
+the N×T×w spike tensor never exists (n_inputs bytes/sample instead of
+T*w*4 — T/8×, 16× at T=128).  ``encode="host"`` (the default) keeps
+the legacy statistical pre-encode (``poisson_encode_batch`` with the
+JAX PRNG) as the fallback path.
+
+Placement: ``mesh_shape=(data, neurons)`` shards every engine launch
+over a 2-D mesh — the block-stream/batch axis over "data", neuron rows
+over "neurons" — making ``train_mode="parallel"`` a data-parallel sweep
+whose weights never leave their devices.  Any factorization is
+bit-exact with the unsharded run.
+
 Execution (kernel path, backend, chunking, placement) is owned by the
 unified engine: ``SNNTrainConfig.plan()`` builds the
 :class:`~repro.engine.SNNEnginePlan` and everything below drives
@@ -34,7 +49,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitpack import n_words
-from repro.core.encoder import poisson_encode_batch
+from repro.core.encoder import (poisson_encode_batch,
+                                quantize_intensities, sample_seeds)
 from repro.core.lif import LIFParams, lif_params
 from repro.core.rvsnn import snn_regfile, snn_regfile_batch
 from repro.core.stdp import STDPParams, init_weights, stdp_params
@@ -65,9 +81,13 @@ class SNNTrainConfig:
                                     # error set) | "parallel" (batched
                                     # training grid, all blocks at once)
     window_chunk: int | None = None  # VMEM spike-slab size (None = T)
-    encode: str = "host"             # intensity-verb encode placement:
-                                     # "host" | "kernel" (in-VMEM draw)
+    encode: str = "host"             # dataset ingestion: "host" keeps
+                                     # the legacy JAX-PRNG pre-encode;
+                                     # "kernel" holds uint8 intensities
+                                     # and draws spikes in VMEM
     encode_seed: int = 0             # counter base for the in-kernel draw
+    mesh_shape: tuple | None = None  # (data, neurons) 2-D placement of
+                                     # every engine launch (None = local)
 
     @property
     def n_blocks(self) -> int:
@@ -110,13 +130,20 @@ def _regfile_seed(key: jax.Array) -> int:
 
 
 def _train_block(cfg: SNNTrainConfig, key: jax.Array,
-                 spike_trains: jnp.ndarray, labels: jnp.ndarray,
-                 block_idx: int) -> jnp.ndarray:
+                 labels: jnp.ndarray, block_idx: int, *,
+                 spike_trains: jnp.ndarray | None = None,
+                 intensities: jnp.ndarray | None = None,
+                 seeds: jnp.ndarray | None = None) -> jnp.ndarray:
     """Train one 10-neuron block online over (possibly repeated) samples.
 
-    ``key`` seeds the block's LFSR lanes (stochastic-STDP randomness), so
-    per-block randomness is keyed; the default ``train()`` key chain is
-    derived from ``cfg.seed``, keeping default-seed runs reproducible.
+    The sample stream is EITHER pre-encoded ``spike_trains``
+    uint32[N, T, w] (``encode="host"``) OR uint8 ``intensities``
+    [N, n_inputs] with per-sample counter ``seeds`` i32[N] — the
+    intensity-resident path, where each presentation's window is drawn
+    from the counter hash at use.  ``key`` seeds the block's LFSR lanes
+    (stochastic-STDP randomness), so per-block randomness is keyed; the
+    default ``train()`` key chain is derived from ``cfg.seed``, keeping
+    default-seed runs reproducible.
     """
     w0 = init_weights(cfg.n_classes, cfg.words, dense=True)
     rf = snn_regfile(w0, seed=_regfile_seed(key))
@@ -124,6 +151,13 @@ def _train_block(cfg: SNNTrainConfig, key: jax.Array,
     # The plan's params are plain ints closed over via the engine, so
     # they stay concrete at trace time and lower as kernel literals.
     eng = SNNEngine(cfg.plan(block_idx))
+    if intensities is not None:
+        step = jax.jit(functools.partial(_engine.train_stream, eng,
+                                         n_steps=cfg.n_steps))
+        for _ in range(cfg.epochs):
+            rf, _ = step(rf, teach=teach, intensities=intensities,
+                         seeds=seeds)
+        return rf.weights
     step = jax.jit(functools.partial(_engine.train_stream, eng))
     for _ in range(cfg.epochs):
         rf, _ = step(rf, spike_trains, teach)
@@ -131,8 +165,11 @@ def _train_block(cfg: SNNTrainConfig, key: jax.Array,
 
 
 def _train_blocks_parallel(cfg: SNNTrainConfig, key: jax.Array,
-                           spike_trains: jnp.ndarray,
-                           labels: jnp.ndarray) -> jnp.ndarray:
+                           labels: jnp.ndarray, *,
+                           spike_trains: jnp.ndarray | None = None,
+                           intensities: jnp.ndarray | None = None,
+                           seeds: jnp.ndarray | None = None
+                           ) -> jnp.ndarray:
     """Train all blocks concurrently on the full set (batched grid).
 
     Every presented sample is one ``engine.train_batch`` launch covering
@@ -140,8 +177,12 @@ def _train_blocks_parallel(cfg: SNNTrainConfig, key: jax.Array,
     LFSR seeds AND their LTP schedule — ``ltp_prob`` is a per-stream
     SMEM scalar operand, so block 0 trains at the base ``ltp_prob`` and
     blocks >= 1 at ``ltp_prob_active``, matching active mode's
-    ``cfg.stdp(block_idx)`` schedule.  Returns packed weights
-    uint32[n_neurons, words].
+    ``cfg.stdp(block_idx)`` schedule.  With ``cfg.mesh_shape`` the
+    launch shards block streams over the "data" axis and neuron rows
+    over "neurons" — the 2-D data-parallel training sweep.  The sample
+    stream is pre-encoded windows OR uint8 intensities + per-sample
+    seeds (shared across blocks, exactly as the broadcast spike trains
+    were).  Returns packed weights uint32[n_neurons, words].
     """
     b = cfg.n_blocks
     w0 = jnp.broadcast_to(
@@ -150,16 +191,26 @@ def _train_blocks_parallel(cfg: SNNTrainConfig, key: jax.Array,
     # blocks differ ONLY by these seeds, and lfsr.seed folds its base to
     # 16 bits — draw without replacement so no two blocks can collide
     # into bit-identical training runs
-    seeds = [int(s) + 1
-             for s in jax.random.choice(key, (1 << 16) - 1, (b,),
-                                        replace=False)]
-    rfs = snn_regfile_batch(w0, seeds)
+    lfsr_seeds = [int(s) + 1
+                  for s in jax.random.choice(key, (1 << 16) - 1, (b,),
+                                             replace=False)]
+    rfs = snn_regfile_batch(w0, lfsr_seeds)
     teach = _teacher(labels, cfg)
     teach_b = jnp.broadcast_to(teach, (b,) + teach.shape)
-    trains_b = jnp.broadcast_to(spike_trains, (b,) + spike_trains.shape)
     lp = jnp.asarray([cfg.ltp_prob if i == 0 else cfg.ltp_prob_active
                       for i in range(b)], jnp.int32)
     eng = SNNEngine(cfg.plan(0))
+    if intensities is not None:
+        inten_b = jnp.broadcast_to(intensities,
+                                   (b,) + intensities.shape)
+        step = jax.jit(functools.partial(_engine.train_stream_batch,
+                                         eng, ltp_prob=lp,
+                                         n_steps=cfg.n_steps))
+        for _ in range(cfg.epochs):
+            rfs, _ = step(rfs, teach=teach_b, intensities=inten_b,
+                          seeds=seeds)
+        return rfs.weights.reshape(b * cfg.n_classes, cfg.words)
+    trains_b = jnp.broadcast_to(spike_trains, (b,) + spike_trains.shape)
     step = jax.jit(functools.partial(_engine.train_stream_batch, eng,
                                      ltp_prob=lp))
     for _ in range(cfg.epochs):
@@ -167,17 +218,31 @@ def _train_blocks_parallel(cfg: SNNTrainConfig, key: jax.Array,
     return rfs.weights.reshape(b * cfg.n_classes, cfg.words)
 
 
-def classify(model: SNNModel, spike_trains: jnp.ndarray) -> jnp.ndarray:
-    """Predicted class int32[B]: class of the maximally-firing neuron."""
-    counts = SNNEngine(model.cfg.plan()).infer(model.weights,
-                                               spike_trains)
+def classify(model: SNNModel, spike_trains: jnp.ndarray | None = None,
+             *, intensities: jnp.ndarray | None = None,
+             seeds=None) -> jnp.ndarray:
+    """Predicted class int32[B]: class of the maximally-firing neuron.
+
+    Takes pre-encoded ``spike_trains`` uint32[B, T, w] or uint8
+    ``intensities`` [B, n_inputs] (+ per-sample ``seeds``), presented
+    over ``cfg.n_steps`` cycles through the plan's encode path.
+    """
+    eng = SNNEngine(model.cfg.plan())
+    if intensities is not None:
+        counts = eng.infer(model.weights, intensities=intensities,
+                           seeds=seeds, n_steps=model.cfg.n_steps)
+    else:
+        counts = eng.infer(model.weights, spike_trains)
     best = jnp.argmax(counts, axis=-1)
     return model.neuron_class[best]
 
 
-def accuracy(model: SNNModel, spike_trains: jnp.ndarray,
-             labels: jnp.ndarray) -> float:
-    pred = classify(model, spike_trains)
+def accuracy(model: SNNModel, spike_trains: jnp.ndarray | None = None,
+             labels: jnp.ndarray | None = None, *,
+             intensities: jnp.ndarray | None = None,
+             seeds=None) -> float:
+    pred = classify(model, spike_trains, intensities=intensities,
+                    seeds=seeds)
     return float(jnp.mean((pred == labels).astype(jnp.float32)))
 
 
@@ -187,6 +252,13 @@ def train(cfg: SNNTrainConfig, images: np.ndarray, labels: np.ndarray,
 
     images: float32[N, n_inputs] normalized (already preprocessed);
     labels: int[N].
+
+    Dataset residency follows ``cfg.encode``: "host" pre-encodes the
+    whole set into a uint32[N, T, w] spike tensor with the statistical
+    JAX PRNG (the legacy fallback); "kernel" quantizes ONCE to
+    uint8[N, n_inputs] + per-sample counter-hash seeds and every
+    presentation draws its window inside the kernels — the N×T×w
+    tensor is never materialized.
     """
     if cfg.train_mode not in ("active", "parallel"):
         raise ValueError(f"train_mode must be 'active' or 'parallel', "
@@ -194,34 +266,55 @@ def train(cfg: SNNTrainConfig, images: np.ndarray, labels: np.ndarray,
     if key is None:
         key = jax.random.key(cfg.seed)
     key, ek = jax.random.split(key)
-    spike_trains = poisson_encode_batch(
-        ek, jnp.asarray(images, jnp.float32), cfg.n_steps)
     labels_j = jnp.asarray(labels, jnp.int32)
+
+    if cfg.encode == "kernel":
+        spike_trains = None
+        intensities = quantize_intensities(
+            jnp.asarray(images, jnp.float32))
+        seeds = sample_seeds(cfg.encode_seed, intensities.shape[0])
+    else:
+        spike_trains = poisson_encode_batch(
+            ek, jnp.asarray(images, jnp.float32), cfg.n_steps)
+        intensities = seeds = None
 
     if cfg.train_mode == "parallel":
         key, bk = jax.random.split(key)
-        weights = _train_blocks_parallel(cfg, bk, spike_trains, labels_j)
+        weights = _train_blocks_parallel(
+            cfg, bk, labels_j, spike_trains=spike_trains,
+            intensities=intensities, seeds=seeds)
         classes = jnp.tile(jnp.arange(cfg.n_classes, dtype=jnp.int32),
                            cfg.n_blocks)
         return SNNModel(weights, classes, cfg)
 
     blocks: list[jnp.ndarray] = []
     classes: list[jnp.ndarray] = []
-    cur_trains, cur_labels = spike_trains, labels_j
+    cur = (spike_trains, intensities, seeds, labels_j)
     for b in range(cfg.n_blocks):
+        cur_trains, cur_inten, cur_seeds, cur_labels = cur
         key, bk = jax.random.split(key)
-        blocks.append(_train_block(cfg, bk, cur_trains, cur_labels, b))
+        blocks.append(_train_block(
+            cfg, bk, cur_labels, b, spike_trains=cur_trains,
+            intensities=cur_inten, seeds=cur_seeds))
         classes.append(jnp.arange(cfg.n_classes, dtype=jnp.int32))
         if b + 1 == cfg.n_blocks:
             break
         # Active learning: next block trains on this ensemble's errors.
         model = SNNModel(jnp.concatenate(blocks, axis=0),
                          jnp.concatenate(classes), cfg)
-        pred = classify(model, spike_trains)
+        if intensities is not None:
+            pred = classify(model, intensities=intensities, seeds=seeds)
+        else:
+            pred = classify(model, spike_trains)
         err = np.asarray(pred != labels_j)
         if not err.any():
             break
-        cur_trains = spike_trains[np.where(err)[0]]
-        cur_labels = labels_j[np.where(err)[0]]
+        idx = np.where(err)[0]
+        # error samples keep their ORIGINAL windows: same spike train /
+        # same (seed, intensity) pair on every re-presentation
+        if intensities is not None:
+            cur = (None, intensities[idx], seeds[idx], labels_j[idx])
+        else:
+            cur = (spike_trains[idx], None, None, labels_j[idx])
     return SNNModel(jnp.concatenate(blocks, axis=0),
                     jnp.concatenate(classes), cfg)

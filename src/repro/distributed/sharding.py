@@ -51,11 +51,17 @@ DEFAULT_RULES: dict = {
     "p_experts": None,
     "layers": None,           # stacked-layer leading axis
     # SNN window engine (repro.distributed.snn_mesh): the neuron axis
-    # shards across a 1-D "neuron" mesh — rows are independent (LFSR
+    # shards across the "neuron" mesh axis — rows are independent (LFSR
     # lanes are per-neuron, so shards carry no cross-device PRNG state);
-    # the packed synapse-word axis stays replicated with its row.
+    # the packed synapse-word axis stays replicated with its row.  The
+    # sample/stream batch axis of the batched window ops shards across
+    # the "data" mesh axis of a 2-D (data × neuron) mesh — streams are
+    # independent too (per-stream regfiles, per-sample counter-hash
+    # seeds), and on a 1-D neuron mesh the rule resolves to replicated,
+    # so the same specs drive both placements.
     "neurons": "neuron",
     "syn_words": None,
+    "data": "data",
 }
 
 # Sequence-parallel attention variant: for archs whose head counts do not

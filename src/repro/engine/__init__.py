@@ -21,6 +21,7 @@ old call                                                     engine equivalent
 ``network.train_stream_batch(rfs, wins, teach, ...)``        ``engine.train_stream_batch(SNNEngine(plan), rfs, ...)``
 ``snn_mesh.sharded_infer_window_batch(..., mesh=m)``         ``SNNEngine(replace(plan, mesh=m)).infer(w, wins)``
 ``snn_mesh.sharded_fused_snn_window(..., mesh=m)``           ``SNNEngine(replace(plan, mesh=m)).train(rf, win)``
+``snn_mesh.sharded_train_window_batch(..., mesh=m2d)``       ``SNNEngine(replace(plan, mesh_shape=(d, n))).train_batch``
 ``trainer kwargs (cycle_backend/kernel_backend/...)``        ``SNNEnginePlan`` fields / ``plan_from_config(cfg)``
 ===========================================================  ==========================================================
 
@@ -28,8 +29,12 @@ where ``plan = SNNEnginePlan(threshold=..., leak=..., w_exp=...,
 gain=..., n_syn=..., ltp_prob=..., cycle_backend=...,
 kernel_backend=..., t_chunk=...)`` is built once (or via
 :func:`plan_from_config` from an ``SNNTrainConfig``), and ``replace`` is
-``dataclasses.replace``.  The legacy entrypoints remain as deprecation
-wrappers with byte-identical outputs.
+``dataclasses.replace``.  Placement is an explicit ``mesh`` or the
+declarative ``mesh_shape=(data, neurons)`` — the 2-D grid shards batch
+axes over "data" and regfiles over "neurons"; the verbs dispatch 1-D
+vs 2-D automatically and every factorization is bit-exact with the
+unsharded path.  The legacy entrypoints remain as deprecation wrappers
+with byte-identical outputs.
 """
 
 from repro.engine.engine import (SNNEngine, SNNOutput,

@@ -121,17 +121,18 @@ class SNNEngine:
         either way.
         """
         p = self.plan
+        mesh = p.placement()
         if intensities is not None or windows is None:
             _one_of(windows, intensities, n_steps, "infer")
             seeds = self._seeds(seeds, intensities.shape[0])
             if p.encode == "kernel":
-                if p.mesh is not None:
+                if mesh is not None:
                     from repro.distributed import snn_mesh
                     return snn_mesh.sharded_infer_window_batch_encode(
                         weights, intensities, seeds, n_steps=n_steps,
                         threshold=p.threshold, leak=p.leak,
                         t_total=t_total, t_chunk=p.t_chunk,
-                        backend=p.kernel_backend, mesh=p.mesh)
+                        backend=p.kernel_backend, mesh=mesh)
                 return ops.infer_window_batch_encode(
                     weights, intensities, seeds, n_steps=n_steps,
                     threshold=p.threshold, leak=p.leak, t_total=t_total,
@@ -139,12 +140,12 @@ class SNNEngine:
             windows = encode_windows_host(seeds, intensities, n_steps,
                                     weights.shape[1], t_total)
         if p.cycle_backend == "window":
-            if p.mesh is not None:
+            if mesh is not None:
                 from repro.distributed import snn_mesh
                 return snn_mesh.sharded_infer_window_batch(
                     weights, windows, threshold=p.threshold, leak=p.leak,
                     t_chunk=p.t_chunk, backend=p.kernel_backend,
-                    mesh=p.mesh)
+                    mesh=mesh)
             return ops.infer_window_batch(
                 weights, windows, threshold=p.threshold, leak=p.leak,
                 t_chunk=p.t_chunk, backend=p.kernel_backend)
@@ -177,20 +178,21 @@ class SNNEngine:
         :class:`SNNOutput`.
         """
         p = self.plan
+        mesh = p.placement()
         if intensities is not None or window is None:
             _one_of(window, intensities, n_steps, "train")
             seed = p.encode_seed if seed is None else seed
             if p.encode == "kernel":
                 teach_arr = _teach_arr(teach, rf.v)
                 kwargs = p.window_kwargs()
-                if p.mesh is not None:
+                if mesh is not None:
                     from repro.distributed import snn_mesh
                     w2, v2, fired, lf2 = \
                         snn_mesh.sharded_fused_snn_window_encode(
                             rf.weights, intensities, seed, rf.v, rf.lfsr,
                             teach_arr, n_steps=n_steps,
                             t_chunk=p.t_chunk,
-                            backend=p.kernel_backend, mesh=p.mesh,
+                            backend=p.kernel_backend, mesh=mesh,
                             **kwargs)
                 else:
                     w2, v2, fired, lf2 = ops.fused_snn_window_encode(
@@ -208,12 +210,12 @@ class SNNEngine:
         if p.cycle_backend == "window":
             teach_arr = _teach_arr(teach, rf.v)
             kwargs = p.window_kwargs()
-            if p.mesh is not None:
+            if mesh is not None:
                 from repro.distributed import snn_mesh
                 w2, v2, fired, lf2 = snn_mesh.sharded_fused_snn_window(
                     rf.weights, window, rf.v, rf.lfsr, teach_arr,
                     t_chunk=p.t_chunk, backend=p.kernel_backend,
-                    mesh=p.mesh, **kwargs)
+                    mesh=mesh, **kwargs)
             else:
                 w2, v2, fired, lf2 = ops.fused_snn_window(
                     rf.weights, window, rf.v, rf.lfsr, teach_arr,
@@ -259,13 +261,14 @@ class SNNEngine:
                              "(w_exp is None)")
         lp = p.ltp_prob if ltp_prob is None else ltp_prob
         teach = _teach_arr(teach, rfs.v)
+        mesh = p.placement()
         if intensities is not None or windows is None:
             _one_of(windows, intensities, n_steps, "train_batch")
             seeds = self._seeds(seeds, intensities.shape[0])
             if p.encode == "kernel":
                 kwargs = {k: v for k, v in p.window_kwargs().items()
                           if k not in ("train", "ltp_prob")}
-                if p.mesh is not None:
+                if mesh is not None:
                     from repro.distributed import snn_mesh
                     w2, v2, fired, lf2 = \
                         snn_mesh.sharded_train_window_batch_encode(
@@ -273,7 +276,7 @@ class SNNEngine:
                             rfs.lfsr, teach.astype(jnp.int32),
                             ltp_prob=lp, n_steps=n_steps,
                             t_chunk=p.t_chunk,
-                            backend=p.kernel_backend, mesh=p.mesh,
+                            backend=p.kernel_backend, mesh=mesh,
                             **kwargs)
                 else:
                     w2, v2, fired, lf2 = ops.train_window_batch_encode(
@@ -292,13 +295,13 @@ class SNNEngine:
         if p.cycle_backend == "window":
             kwargs = {k: v for k, v in p.window_kwargs().items()
                       if k not in ("train", "ltp_prob")}
-            if p.mesh is not None:
+            if mesh is not None:
                 from repro.distributed import snn_mesh
                 w2, v2, fired, lf2 = snn_mesh.sharded_train_window_batch(
                     rfs.weights, windows, rfs.v, rfs.lfsr,
                     teach.astype(jnp.int32), ltp_prob=lp,
                     t_chunk=p.t_chunk, backend=p.kernel_backend,
-                    mesh=p.mesh, **kwargs)
+                    mesh=mesh, **kwargs)
             else:
                 w2, v2, fired, lf2 = ops.train_window_batch(
                     rfs.weights, windows, rfs.v, rfs.lfsr,
@@ -333,14 +336,33 @@ class SNNEngine:
 # --- stream drivers (compose the verbs over the sample axis) ---------------
 
 def train_stream(engine: SNNEngine, rf: SnnRegFile,
-                 spike_trains: jnp.ndarray, teach: jnp.ndarray
+                 spike_trains: jnp.ndarray | None = None,
+                 teach: jnp.ndarray | None = None, *,
+                 intensities: jnp.ndarray | None = None, seeds=None,
+                 n_steps: int | None = None
                  ) -> tuple[SnnRegFile, jnp.ndarray]:
     """Online STDP over a stream of samples (sequential, as in hardware).
 
-    spike_trains uint32[N, T, w], teach i32[N, n].  Neuron state resets
-    between presentations; weights and LFSR persist.  Returns
-    (rf', spike_counts i32[N, n]).
+    Pass EITHER pre-packed ``spike_trains`` uint32[N, T, w] OR uint8
+    ``intensities`` [N, n_in] with ``n_steps`` and per-sample counter
+    ``seeds`` i32[N] (default: the engine's seed chain) — the
+    intensity-resident form never materializes the N×T×w spike tensor;
+    each presentation draws its window from the counter hash inside the
+    kernel (``encode="kernel"``) or per-sample on the host.  teach
+    i32[N, n].  Neuron state resets between presentations; weights and
+    LFSR persist.  Returns (rf', spike_counts i32[N, n]).
     """
+    _one_of(spike_trains, intensities, n_steps, "train_stream")
+    if intensities is not None:
+        seeds = engine._seeds(seeds, intensities.shape[0])
+
+        def body(carry: SnnRegFile, inp):
+            x, s, tch = inp
+            out = engine.train(reset_between_samples(carry), teach=tch,
+                               intensities=x, seed=s, n_steps=n_steps)
+            return out.regfile, out.spike_counts
+
+        return jax.lax.scan(body, rf, (intensities, seeds, teach))
 
     def body(carry: SnnRegFile, inp):
         window, tch = inp
@@ -351,18 +373,45 @@ def train_stream(engine: SNNEngine, rf: SnnRegFile,
 
 
 def train_stream_batch(engine: SNNEngine, rfs: SnnRegFile,
-                       spike_trains: jnp.ndarray, teach: jnp.ndarray,
-                       *, ltp_prob=None
+                       spike_trains: jnp.ndarray | None = None,
+                       teach: jnp.ndarray | None = None, *,
+                       ltp_prob=None,
+                       intensities: jnp.ndarray | None = None,
+                       seeds=None, n_steps: int | None = None
                        ) -> tuple[SnnRegFile, jnp.ndarray]:
     """B independent sample streams, one :meth:`SNNEngine.train_batch`
     launch per presented sample.
 
-    spike_trains uint32[B, N, T, w], teach i32[B, N, n]; ``ltp_prob``
+    Pass EITHER ``spike_trains`` uint32[B, N, T, w] OR uint8
+    ``intensities`` [B, N, n_in] with ``n_steps`` and per-sample
+    ``seeds`` i32[N] (shared by every stream, as broadcast spike trains
+    would be) or i32[B, N]; teach i32[B, N, n].  ``ltp_prob``
     optionally carries the per-stream i32[B] schedule through every
     launch.  Returns (rfs', spike_counts i32[B, N, n]).
     """
-    trains_t = jnp.swapaxes(spike_trains, 0, 1)
+    _one_of(spike_trains, intensities, n_steps, "train_stream_batch")
     teach_t = jnp.swapaxes(teach, 0, 1)
+    if intensities is not None:
+        b, n_samples = intensities.shape[:2]
+        seeds = (engine._seeds(None, n_samples) if seeds is None
+                 else jnp.asarray(seeds, jnp.int32))
+        seeds = jnp.broadcast_to(seeds, (b, n_samples))
+        inten_t = jnp.swapaxes(intensities, 0, 1)
+        seeds_t = jnp.swapaxes(seeds, 0, 1)
+
+        def body(carry: SnnRegFile, inp):
+            x, s, tch = inp
+            carry = carry._replace(v=jnp.zeros_like(carry.v))
+            rfs2, counts, _ = engine.train_batch(
+                carry, teach=tch, ltp_prob=ltp_prob, intensities=x,
+                seeds=s, n_steps=n_steps)
+            return rfs2, counts
+
+        rfs_out, counts = jax.lax.scan(body, rfs,
+                                       (inten_t, seeds_t, teach_t))
+        return rfs_out, jnp.swapaxes(counts, 0, 1)
+
+    trains_t = jnp.swapaxes(spike_trains, 0, 1)
 
     def body(carry: SnnRegFile, inp):
         windows, tch = inp

@@ -32,9 +32,15 @@ class SNNEnginePlan:
 
     ``w_exp=None`` marks an inference-only plan (SU idle): ``train``
     presents windows without learning, exactly the legacy
-    ``run_sample(stdp=None)`` semantics.  ``mesh`` shard_maps the window
-    ops over a 1-D neuron mesh (window path only — the step path is a
-    plain XLA scan).
+    ``run_sample(stdp=None)`` semantics.  Placement is either an
+    explicit ``mesh`` (any 1-D neuron or 2-D data × neuron Mesh) or the
+    declarative ``mesh_shape=(data, neurons)``, which builds the 2-D
+    host mesh on first use — both shard_map the window ops (window path
+    only — the step path is a plain XLA scan).  Batch axes shard over
+    "data", weights/v/LFSR regfiles over "neurons"; per-stream
+    counter-hash seeds are device-independent, so every ``(data,
+    neurons)`` factorization is bit-exact with the 1-D and unsharded
+    paths.
     """
     # --- LIF / STDP parameters (lower as kernel literals) ---------------
     threshold: int = 192
@@ -56,7 +62,9 @@ class SNNEnginePlan:
     encode_seed: int = 0             # base counter seed for the draw
     # --- serving / placement -------------------------------------------
     max_batch: int = 8               # serving admission cap per launch
-    mesh: Mesh | None = None         # neuron-axis placement (None = local)
+    mesh: Mesh | None = None         # explicit mesh (None = local)
+    mesh_shape: tuple | None = None  # declarative (data, neurons) grid;
+                                     # built via snn_mesh2d on first use
 
     def __post_init__(self):
         if self.cycle_backend not in _CYCLE_BACKENDS:
@@ -78,11 +86,36 @@ class SNNEnginePlan:
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got "
                              f"{self.max_batch}")
-        if self.mesh is not None and self.cycle_backend != "window":
+        if self.mesh_shape is not None:
+            shape = tuple(self.mesh_shape)
+            if (len(shape) != 2
+                    or not all(isinstance(x, int) and x >= 1
+                               for x in shape)):
+                raise ValueError(f"mesh_shape must be a (data, neurons) "
+                                 f"pair of ints >= 1, got "
+                                 f"{self.mesh_shape!r}")
+            object.__setattr__(self, "mesh_shape", shape)
+            if self.mesh is not None:
+                raise ValueError("pass either an explicit mesh or a "
+                                 "mesh_shape, not both")
+        if ((self.mesh is not None or self.mesh_shape is not None)
+                and self.cycle_backend != "window"):
             raise ValueError("mesh placement applies to the window "
                              "path; use cycle_backend='window'")
 
     # --- derived views ---------------------------------------------------
+
+    def placement(self) -> Mesh | None:
+        """The resolved mesh the verbs dispatch over: the explicit
+        ``mesh`` when given, else the ``mesh_shape`` grid built over the
+        host's devices (Mesh equality is structural, so rebuilding per
+        call never re-traces), else None (local execution)."""
+        if self.mesh is not None:
+            return self.mesh
+        if self.mesh_shape is None:
+            return None
+        from repro.distributed.snn_mesh import snn_mesh2d
+        return snn_mesh2d(*self.mesh_shape)
 
     @property
     def learn(self) -> bool:
@@ -117,9 +150,11 @@ def plan_from_config(cfg, block_idx: int = 0,
 
     ``block_idx`` selects the active-learning LTP schedule exactly as
     ``SNNTrainConfig.stdp`` does (block 0 trains at ``ltp_prob``, later
-    error-driven blocks at ``ltp_prob_active``).
+    error-driven blocks at ``ltp_prob_active``).  An explicit ``mesh``
+    overrides the config's declarative ``mesh_shape``.
     """
     lp = cfg.ltp_prob if block_idx == 0 else cfg.ltp_prob_active
+    shape = getattr(cfg, "mesh_shape", None)
     return SNNEnginePlan(
         threshold=cfg.threshold, leak=cfg.leak, w_exp=cfg.w_exp,
         gain=cfg.gain, n_syn=cfg.n_inputs, ltp_prob=lp,
@@ -127,4 +162,5 @@ def plan_from_config(cfg, block_idx: int = 0,
         kernel_backend=cfg.kernel_backend,
         t_chunk=cfg.window_chunk,
         encode=getattr(cfg, "encode", "host"),
-        encode_seed=getattr(cfg, "encode_seed", 0), mesh=mesh)
+        encode_seed=getattr(cfg, "encode_seed", 0), mesh=mesh,
+        mesh_shape=None if mesh is not None else shape)

@@ -301,3 +301,73 @@ def test_trainer_parallel_mode_keeps_active_schedule():
     np.testing.assert_array_equal(wa[:10], wb[:10])
     # block 1 sees ltp_prob_active 1023 vs 16 -> different weights
     assert (wa[10:] != wb[10:]).any()
+
+
+# --- 2-D placement: mesh_shape in the plan -----------------------------------
+
+def test_plan_mesh_shape_validation_and_roundtrip():
+    cfg = SNNTrainConfig(mesh_shape=(2, 4))
+    assert plan_from_config(cfg).mesh_shape == (2, 4)
+    # an explicit mesh overrides the config's declarative shape
+    m = snn_mesh.snn_mesh()
+    p = plan_from_config(cfg, mesh=m)
+    assert p.mesh is m and p.mesh_shape is None
+    # lists normalize to tuples so the frozen plan stays hashable
+    assert _plan(mesh_shape=[1, 1]).mesh_shape == (1, 1)
+    for bad in ((0, 2), (2,), (1, 2, 3), ("2", "4")):
+        with pytest.raises(ValueError):
+            _plan(mesh_shape=bad)
+    with pytest.raises(ValueError):
+        _plan(mesh_shape=(1, 1), cycle_backend="step")
+    with pytest.raises(ValueError):
+        _plan(mesh_shape=(1, 1), mesh=snn_mesh.snn_mesh())
+
+
+def test_plan_placement_resolution():
+    assert _plan().placement() is None
+    m = snn_mesh.snn_mesh()
+    assert _plan(mesh=m).placement() is m
+    built = _plan(mesh_shape=(1, 1)).placement()
+    assert built.shape == {"data": 1, "neuron": 1}
+
+
+def test_mesh_shape_verbs_match_local_plan():
+    """All three verbs through a (1, 1) grid == the unplaced plan,
+    bit-exactly (real factorizations run in test_snn_mesh's subprocess
+    test; dispatch is identical, only the device grid differs)."""
+    weights, windows, teach = _operands(31)
+    rng = np.random.default_rng(33)
+    local, grid = _plan(), _plan(mesh_shape=(1, 1))
+
+    got = SNNEngine(grid).infer(weights, windows)
+    want = SNNEngine(local).infer(weights, windows)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    out_g = SNNEngine(grid).train(snn_regfile(weights, seed=5),
+                                  windows[0], teach)
+    out_l = SNNEngine(local).train(snn_regfile(weights, seed=5),
+                                   windows[0], teach)
+    _assert_rf_equal(out_g.regfile, out_l.regfile)
+    np.testing.assert_array_equal(np.asarray(out_g.spike_counts),
+                                  np.asarray(out_l.spike_counts))
+
+    wts_b = jnp.asarray(rng.integers(0, 2**32, (B, N, W),
+                                     dtype=np.uint32))
+    teach_b = jnp.asarray(rng.integers(-50, 50, (B, N), dtype=np.int32))
+    inten = jnp.asarray(rng.integers(0, 256, (B, W * 32),
+                                     dtype=np.uint8))
+    seeds = jnp.arange(1, B + 1, dtype=jnp.int32)
+    for plan_kw in (dict(), dict(encode="kernel")):
+        rfs_g = snn_regfile_batch(wts_b, [7, 8, 9])
+        rfs_l = snn_regfile_batch(wts_b, [7, 8, 9])
+        eng_g = SNNEngine(_plan(mesh_shape=(1, 1), **plan_kw))
+        eng_l = SNNEngine(_plan(**plan_kw))
+        kw = (dict(intensities=inten, seeds=seeds, n_steps=T)
+              if plan_kw else dict(windows=windows))
+        rfs_g2, counts_g, _ = eng_g.train_batch(rfs_g, teach=teach_b,
+                                                **kw)
+        rfs_l2, counts_l, _ = eng_l.train_batch(rfs_l, teach=teach_b,
+                                                **kw)
+        _assert_rf_equal(rfs_g2, rfs_l2)
+        np.testing.assert_array_equal(np.asarray(counts_g),
+                                      np.asarray(counts_l))

@@ -111,8 +111,11 @@ def test_train_block_key_is_used_and_reproducible():
     sp = poisson_encode_batch(jax.random.key(0),
                               jnp.asarray(imgs, jnp.float32), cfg.n_steps)
     labels_j = jnp.asarray(labels, jnp.int32)
-    wa = _train_block(cfg, jax.random.key(1), sp, labels_j, 0)
-    wb = _train_block(cfg, jax.random.key(1), sp, labels_j, 0)
-    wc = _train_block(cfg, jax.random.key(2), sp, labels_j, 0)
+    wa = _train_block(cfg, jax.random.key(1), labels_j, 0,
+                      spike_trains=sp)
+    wb = _train_block(cfg, jax.random.key(1), labels_j, 0,
+                      spike_trains=sp)
+    wc = _train_block(cfg, jax.random.key(2), labels_j, 0,
+                      spike_trains=sp)
     np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
     assert (np.asarray(wa) != np.asarray(wc)).any()
