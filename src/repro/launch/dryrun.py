@@ -118,7 +118,7 @@ def lower_cell(arch: str, shape: ShapeSpec, multi_pod: bool,
     cfg = model.cfg
     rules = rules_for(arch, shape, mesh)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with shd.use_mesh(mesh, rules):
         params_shape = jax.eval_shape(
             lambda: model.init_params(jax.random.key(0)))
@@ -159,10 +159,10 @@ def lower_cell(arch: str, shape: ShapeSpec, multi_pod: bool,
                          donate_argnums=(2,))
             lowered = fn.lower(params_shape, tok_spec, cache_shape,
                                jax.ShapeDtypeStruct((), jnp.int32))
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     rl = analyze(compiled, chips)

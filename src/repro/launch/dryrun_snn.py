@@ -97,7 +97,7 @@ def lower_snn(kind: str, multi_pod: bool, packed: bool) -> dict:
     dp = ("pod", "data") if multi_pod else ("data",)
     W = n_words(N_INPUTS)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if kind == "infer":
         if packed:
             w_s = jax.ShapeDtypeStruct((N_NEURONS, W), jnp.uint32)
@@ -122,7 +122,7 @@ def lower_snn(kind: str, multi_pod: bool, packed: bool) -> dict:
             train_packed, in_shardings=(row, row, rep, tch),
             donate_argnums=(0, 1)).lower(w_s, l_s, s_s, t_s)
     compiled = lowered.compile()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     rl = analyze(compiled, chips)

@@ -28,17 +28,26 @@ def _serve_snn(args) -> None:
     """SNN serving demo: intensity-resident digit requests through the
     dynamic-window-batching :class:`SNNServingEngine` (ragged T's to
     exercise the padding path; ``--encode kernel`` draws the spike
-    windows in VMEM, so they never exist in HBM)."""
+    windows in VMEM, so they never exist in HBM).  ``--inject-faults``
+    runs the same traffic under a seeded fault storm (launch failures,
+    corrupted counts, zero-deadline requests) and proves the robustness
+    layer: every request terminates in a terminal status and every
+    SERVED count vector stays bit-exact with the host oracle."""
     import dataclasses
+    import sys
+    from collections import Counter
 
+    import jax.numpy as jnp
     import numpy as np
 
     from repro.configs.wenquxing_snn import WENQUXING_22A
-    from repro.core.encoder import quantize_intensities
+    from repro.core.encoder import encode_from_counter, quantize_intensities
     from repro.core.stdp import init_weights
     from repro.data.digits import make_digits
     from repro.engine import plan_from_config
-    from repro.serving import SNNRequest, SNNServingEngine
+    from repro.kernels import ops
+    from repro.serving import (FaultInjector, FaultSpec, SNNRequest,
+                               SNNServingEngine, SNNServingPolicy)
 
     cfg = dataclasses.replace(WENQUXING_22A, n_steps=24,
                               encode=args.encode)
@@ -48,21 +57,53 @@ def _serve_snn(args) -> None:
     neuron_class = np.tile(np.arange(cfg.n_classes), cfg.n_blocks)
     imgs, _ = make_digits(args.requests, seed=0)
     inten = np.asarray(quantize_intensities(imgs))
+    policy = SNNServingPolicy(max_retries=2, canary_every=2,
+                              reprobe_after=4)
+    injector = None
+    if args.inject_faults:
+        injector = FaultInjector(FaultSpec(
+            p_launch_error=0.4, p_corrupt=0.4,
+            error_burst=policy.max_retries + 2, seed=args.fault_seed))
     reqs = []
     for i in range(args.requests):
         t_i = cfg.n_steps - 4 * (i % 3)     # ragged window lengths
+        # under a fault storm, every 5th request carries an already-
+        # elapsed deadline so the EXPIRED path is exercised too
+        ddl = 0.0 if (args.inject_faults and i % 5 == 4) else None
         reqs.append(SNNRequest(rid=i, intensities=inten[i],
-                               n_steps=t_i))
-    eng = SNNServingEngine(weights, plan, neuron_class=neuron_class)
+                               n_steps=t_i, deadline_ms=ddl))
+    eng = SNNServingEngine(weights, plan, neuron_class=neuron_class,
+                           policy=policy, on_launch=injector)
     eng.run(reqs)
     print(f"wenquxing-snn: {sum(r.done for r in reqs)}/{len(reqs)} done, "
           f"{eng.windows_served} windows in {eng.batches} batches "
           f"(max_batch={plan.max_batch}, encode={plan.encode})")
+    by_status = Counter(r.status for r in reqs)
+    non_terminal = sum(not r.terminal for r in reqs)
+    print("statuses: " + " ".join(f"{k}={v}"
+                                  for k, v in sorted(by_status.items()))
+          + f" non-terminal={non_terminal}")
+    served = [r for r in reqs if r.status == "SERVED"]
+    mismatches = 0
+    for r in served:
+        win = np.asarray(encode_from_counter(
+            r.seed, jnp.asarray(r.intensities), r.n_steps))
+        win = np.pad(win, ((0, 0), (0, eng.words - win.shape[1])))
+        want = np.asarray(ops.infer_window_batch(
+            eng.weights, jnp.asarray(win)[None],
+            threshold=plan.threshold, leak=plan.leak, backend="ref"))[0]
+        mismatches += int(not np.array_equal(r.counts, want))
+    print(f"oracle-check: {'ok' if mismatches == 0 else 'MISMATCH'} "
+          f"({len(served)} served, {mismatches} diverged)")
     if args.bench:
         stats = eng.stats()
         stats["padded_slot_waste"] = round(stats["padded_slot_waste"], 4)
+        if injector is not None:
+            stats.update(injector.stats())
         print("serve-bench: " + " ".join(
             f"{k}={v}" for k, v in sorted(stats.items())))
+    if non_terminal or mismatches:
+        sys.exit(1)
 
 
 def main() -> None:
@@ -93,7 +134,14 @@ def main() -> None:
                     help="SNN encode placement (wenquxing-snn only)")
     ap.add_argument("--bench", action="store_true",
                     help="print serving stats (padded-slot waste, "
-                         "per-step wall-clock) after the run")
+                         "per-step wall-clock, robustness counters, "
+                         "latency p50/p99) after the run")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="run the SNN serve under a seeded fault storm "
+                         "(launch failures, corrupted counts, expired "
+                         "deadlines) to exercise retry/degradation")
+    ap.add_argument("--fault-seed", type=int, default=7,
+                    help="FaultInjector seed (storms replay exactly)")
     args = ap.parse_args()
 
     if args.arch == "wenquxing-snn":

@@ -2,10 +2,20 @@
 
 Transformer path: continuous-batching :class:`ServingEngine` over KV
 cache slots.  SNN path: :class:`SNNServingEngine`, dynamic window
-batching over the unified SNN engine.
+batching over the unified SNN engine with a fault-tolerant request
+lifecycle (:class:`SNNServingPolicy`) and a deterministic fault
+injection harness (:mod:`repro.serving.faults`).
 """
 
 from repro.serving.engine import Request, ServingEngine
-from repro.serving.snn import SNNRequest, SNNServingEngine
+from repro.serving.faults import FaultInjectedError, FaultInjector, FaultSpec
+from repro.serving.snn import (SNNRequest, SNNServingEngine,
+                               SNNServingPolicy, TERMINAL_STATUSES,
+                               degradation_ladder)
 
-__all__ = ["Request", "ServingEngine", "SNNRequest", "SNNServingEngine"]
+__all__ = [
+    "Request", "ServingEngine",
+    "SNNRequest", "SNNServingEngine", "SNNServingPolicy",
+    "TERMINAL_STATUSES", "degradation_ladder",
+    "FaultInjectedError", "FaultInjector", "FaultSpec",
+]

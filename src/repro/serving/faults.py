@@ -1,0 +1,117 @@
+"""Deterministic fault injection for the SNN serving robustness layer.
+
+:class:`FaultInjector` is the test substrate behind
+:class:`~repro.serving.snn.SNNServingEngine`'s optional ``on_launch``
+hook: when no hook is installed the production serve path runs exactly
+as before (the hook is never consulted), and when one is, every serve /
+canary launch first passes through the injector, which — from one
+seeded ``numpy`` generator, so storms replay bit-identically — may
+
+* raise :class:`FaultInjectedError` (a failed kernel launch; an
+  ``error_burst`` of consecutive failures per trigger lets a single
+  draw push the engine past its retry budget and down the degradation
+  ladder),
+* sleep ``stall_ms`` (an injected stall, visible in the latency
+  percentiles), or
+* return a corruption callable the engine applies to the launch's
+  count matrix.  Corruptions are always *detectable*: they drive a
+  slot negative or past its ``t_total`` cycle budget, which the
+  engine's output integrity guard (``0 <= counts <= t_total``) is
+  specified to catch — in-range corruption is the canary's job, not
+  the guard's.
+
+The engine never hooks its ``kind="fallback"`` oracle re-serves, so an
+injector can never corrupt the path that repairs its own damage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+class FaultInjectedError(RuntimeError):
+    """An injected kernel-launch failure (never raised in production)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Seeded storm recipe: per-launch fault probabilities."""
+    p_launch_error: float = 0.0   # P[launch raises] per hooked launch
+    p_corrupt: float = 0.0        # P[count matrix corrupted]
+    p_stall: float = 0.0          # P[injected stall before the launch]
+    stall_ms: float = 0.0         # stall duration when one fires
+    error_burst: int = 1          # consecutive failures per error trigger
+    seed: int = 0                 # numpy generator seed (replayable)
+
+    def __post_init__(self):
+        for name in ("p_launch_error", "p_corrupt", "p_stall"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+        if self.error_burst < 1:
+            raise ValueError(f"error_burst must be >= 1, got "
+                             f"{self.error_burst}")
+        if self.stall_ms < 0:
+            raise ValueError(f"stall_ms must be >= 0, got {self.stall_ms}")
+
+
+class FaultInjector:
+    """Callable ``on_launch`` hook: ctx dict in, corruption fn (or
+    None) out, :class:`FaultInjectedError` raised for launch failures.
+
+    ``ctx`` carries ``step`` / ``attempt`` / ``level`` / ``kind`` /
+    ``batch_size`` / ``t_lens`` from the engine; all randomness comes
+    from one ``default_rng(spec.seed)``, so a storm is a pure function
+    of (spec, launch sequence).
+    """
+
+    def __init__(self, spec: FaultSpec | None = None, **kwargs):
+        self.spec = spec if spec is not None else FaultSpec(**kwargs)
+        self.rng = np.random.default_rng(self.spec.seed)
+        self.launches = 0
+        self.errors = 0
+        self.corruptions = 0
+        self.stalls = 0
+        self._burst_left = 0
+
+    def __call__(self, ctx: dict):
+        self.launches += 1
+        sp = self.spec
+        draw = self.rng.random(3)
+        if self._burst_left > 0 or draw[0] < sp.p_launch_error:
+            if self._burst_left == 0:
+                self._burst_left = sp.error_burst
+            self._burst_left -= 1
+            self.errors += 1
+            raise FaultInjectedError(
+                f"injected launch failure (step={ctx.get('step')}, "
+                f"level={ctx.get('level')}, kind={ctx.get('kind')})")
+        if draw[1] < sp.p_stall and sp.stall_ms > 0:
+            self.stalls += 1
+            time.sleep(sp.stall_ms / 1e3)
+        if draw[2] < sp.p_corrupt and ctx.get("batch_size", 0) > 0:
+            slot = int(self.rng.integers(ctx["batch_size"]))
+            t_len = int(ctx["t_lens"][slot])
+            mode = int(self.rng.integers(2))
+            self.corruptions += 1
+
+            def corrupt(counts, slot=slot, t_len=t_len, mode=mode):
+                out = np.array(counts)
+                if mode == 0:
+                    out[slot, 0] = -1            # violates counts >= 0
+                else:
+                    out[slot, :] = t_len + 1     # violates counts <= t_total
+                return out
+
+            return corrupt
+        return None
+
+    def stats(self) -> dict:
+        """Injection counters (for bench reports and storm tests)."""
+        return {"fault_launches": self.launches,
+                "fault_errors": self.errors,
+                "fault_corruptions": self.corruptions,
+                "fault_stalls": self.stalls}

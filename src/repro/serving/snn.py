@@ -31,21 +31,77 @@ with ``T_q`` rounded up to the time quantum — one compile per
 window-length bucket instead of one per ragged batch shape.  The
 intensity path additionally carries each sample's true length as a
 traced SMEM operand, so raggedness itself never retraces.
+
+Failure semantics
+-----------------
+
+Serving is fault-tolerant end to end: no exception escapes ``step()``
+or ``run()``, and every submitted request terminates in exactly one
+terminal status.
+
+**Status machine.**  A fresh request is ``NEW``; ``submit()`` moves it
+to ``QUEUED`` or — structurally, without raising — ``REJECTED``
+(malformed request, or backpressure when the queue is at
+``policy.max_queue``).  Batch formation drops queued requests whose
+``deadline_ms`` has elapsed as ``EXPIRED`` and pulls the survivors
+highest-priority-first (FIFO within a priority).  A serve launch then
+ends each batched request as ``SERVED`` (counts attached) or, when
+every retry and degradation rung is exhausted, ``FAILED`` with the
+last error recorded.  ``SERVED | REJECTED | EXPIRED | FAILED`` are
+terminal.
+
+**Degradation ladder.**  Every kernel path has a bit-exact host/ref
+oracle, which makes graceful degradation free of result drift: on
+repeated launch failure the engine steps down
+``plan → encode="host" → kernel_backend="ref"`` (deduplicated; each
+rung re-runs the full retry budget).  Rung changes are recorded in
+``degradation_events``; after ``policy.reprobe_after`` consecutive
+healthy steps the engine re-probes the fast path from rung 0.
+
+**Integrity guard.**  A served count vector must satisfy
+``0 <= counts <= t_total`` per slot (a neuron cannot spike more than
+once per cycle).  Violating slots are re-served on the most-degraded
+oracle rung with the ``on_launch`` hook bypassed, so injected
+corruption can never propagate into a ``SERVED`` result.  A periodic
+known-answer canary (every ``policy.canary_every`` steps) re-serves a
+fixed window through the *current* rung and compares against golden
+ref-path counts, catching in-range corruption the guard cannot.
+
+**Observability.**  ``stats()`` reports rejected / expired / failed /
+retried / degraded / integrity-failure / canary counters plus
+per-request queue-wait and service latency p50/p99 — surfaced by
+``repro.launch.serve --arch wenquxing-snn --bench``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
+from typing import Callable
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.encoder import encode_from_counter
 from repro.engine import SNNEngine, SNNEnginePlan
+from repro.kernels import ops
 
 _T_QUANTUM = 8   # window lengths bucket to multiples of this (or t_chunk)
+
+# --- request lifecycle -------------------------------------------------------
+
+QUEUED = "QUEUED"
+SERVED = "SERVED"
+REJECTED = "REJECTED"
+EXPIRED = "EXPIRED"
+FAILED = "FAILED"
+TERMINAL_STATUSES = frozenset({SERVED, REJECTED, EXPIRED, FAILED})
+
+_CANARY_SEED = 0xC0FFEE
+
+
+def _now_ms() -> float:
+    return time.perf_counter() * 1e3
 
 
 @dataclasses.dataclass
@@ -56,9 +112,72 @@ class SNNRequest:
     intensities: np.ndarray | None = None  # uint8[n_in] (with n_steps)
     n_steps: int | None = None         # presentation length (intensity form)
     seed: int | None = None            # counter seed (default: from rid)
+    priority: int = 0                  # higher pulled into batches first
+    deadline_ms: float | None = None   # queue-relative deadline (None = policy's)
+    # --- lifecycle (written by the serving engine) ----------------------
+    status: str = "NEW"                # NEW -> QUEUED -> terminal
+    error: str | None = None           # rejection / failure detail
+    retries: int = 0                   # launch re-attempts this request rode
     counts: np.ndarray | None = None   # int32[n] spike counts (result)
     pred: int | None = None            # argmax class (if classes known)
-    done: bool = False
+    done: bool = False                 # terminal-status flag
+    queue_wait_ms: float | None = None  # submit -> batch formation
+    service_ms: float | None = None     # submit -> terminal
+    t_submit_ms: float | None = None    # perf_counter stamp at admission
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in TERMINAL_STATUSES
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNServingPolicy:
+    """Admission + recovery policy consulted at submit, batch-formation
+    and launch time.  Frozen, like the plan: one policy per engine."""
+    max_queue: int | None = None       # backpressure bound (None = unbounded)
+    deadline_ms: float | None = None   # default deadline for requests without one
+    max_retries: int = 2               # re-launches per degradation rung
+    retry_backoff_ms: float = 0.0      # base sleep between retries (doubles)
+    degrade_on_failure: bool = True    # step down the ladder on retry exhaustion
+    degrade_on_integrity: bool = True  # ... and on guard / canary violations
+    reprobe_after: int | None = None   # healthy steps before re-probing rung 0
+    canary_every: int = 0              # steps between known-answer checks (0 = off)
+    canary_steps: int = 8              # canary window length
+
+    def __post_init__(self):
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 or None, got "
+                             f"{self.max_queue}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+        if self.retry_backoff_ms < 0:
+            raise ValueError(f"retry_backoff_ms must be >= 0, got "
+                             f"{self.retry_backoff_ms}")
+        if self.reprobe_after is not None and self.reprobe_after < 1:
+            raise ValueError(f"reprobe_after must be >= 1 or None, got "
+                             f"{self.reprobe_after}")
+        if self.canary_every < 0:
+            raise ValueError(f"canary_every must be >= 0, got "
+                             f"{self.canary_every}")
+        if self.canary_steps < 1:
+            raise ValueError(f"canary_steps must be >= 1, got "
+                             f"{self.canary_steps}")
+
+
+def degradation_ladder(plan: SNNEnginePlan) -> list[SNNEnginePlan]:
+    """The graceful-degradation rungs for a plan, fastest first: the
+    plan itself, then host encode, then the ref (host oracle) backend —
+    each provably bit-exact with the previous, adjacent duplicates
+    removed (a host+ref plan has nowhere to degrade to)."""
+    ladder = [plan]
+    host = dataclasses.replace(plan, encode="host")
+    if host != ladder[-1]:
+        ladder.append(host)
+    ref = dataclasses.replace(ladder[-1], kernel_backend="ref")
+    if ref != ladder[-1]:
+        ladder.append(ref)
+    return ladder
 
 
 class SNNServingEngine:
@@ -68,21 +187,40 @@ class SNNServingEngine:
     (int[n], optional) maps the maximally-firing neuron to a class label
     for ``req.pred``.  Admission, padding, encode placement and launch
     shape come from the plan (``max_batch``, ``t_chunk``, ``encode``,
-    placement).
+    placement); failure handling comes from the ``policy`` (see the
+    module docstring's failure-semantics section).  ``on_launch``, when
+    given, is consulted before every serve/canary launch (the fault
+    injection hook — :mod:`repro.serving.faults`); the production path
+    is untouched when it is None.
     """
 
     def __init__(self, weights, plan: SNNEnginePlan, *,
-                 neuron_class=None):
+                 neuron_class=None, policy: SNNServingPolicy | None = None,
+                 on_launch: Callable[[dict], object] | None = None):
         if plan.threshold < 1:
             raise ValueError("SNN serving requires threshold >= 1 "
                              "(zero-padded cycles must stay silent)")
-        self.engine = SNNEngine(plan)
+        self.plan = plan
+        self.policy = policy if policy is not None else SNNServingPolicy()
+        self.on_launch = on_launch
+        self._plans = degradation_ladder(plan)
+        self._engines: dict[int, SNNEngine] = {0: SNNEngine(plan)}
+        self.engine = self._engines[0]
         self.weights = jnp.asarray(weights, jnp.uint32)
-        self.neuron_class = (None if neuron_class is None
-                             else np.asarray(neuron_class))
         self.words = int(self.weights.shape[1])
         self.n_inputs = self.words * 32
-        self.queue: deque[SNNRequest] = deque()
+        if neuron_class is None:
+            self.neuron_class = None
+        else:
+            nc = np.asarray(neuron_class)
+            n = int(self.weights.shape[0])
+            if nc.ndim != 1 or nc.shape[0] != n:
+                raise ValueError(f"neuron_class must be a 1-D array of "
+                                 f"length n={n} (one label per neuron), "
+                                 f"got shape {nc.shape}")
+            self.neuron_class = nc
+        self.queue: list[SNNRequest] = []
+        # --- throughput counters ---------------------------------------
         self.steps = 0
         self.batches = 0
         self.windows_served = 0
@@ -90,36 +228,76 @@ class SNNServingEngine:
         self.slots_padded = 0       # offered - admitted (batch-pad waste)
         self.step_seconds = 0.0     # total serve wall-clock
         self.last_step_seconds = 0.0
+        # --- robustness counters ---------------------------------------
+        self.rejected = 0
+        self.expired = 0
+        self.failed = 0
+        self.retried = 0            # launch re-attempts (all rungs)
+        self.degraded = 0           # ladder steps taken
+        self.integrity_failures = 0
+        self.canary_checks = 0
+        self.canary_failures = 0
+        self.level = 0              # current degradation rung
+        self.healthy_steps = 0      # fault-free steps at this rung
+        self.degradation_events: list[dict] = []
+        self.queue_wait_ms: list[float] = []
+        self.service_ms: list[float] = []
+        self._step_faults = 0
+        self._last_error: str | None = None
+        self._canary_window: np.ndarray | None = None
+        self._canary_golden: np.ndarray | None = None
 
     # --- admission -----------------------------------------------------
 
-    def submit(self, req: SNNRequest) -> None:
+    def _validate(self, req: SNNRequest) -> str | None:
+        """Normalize the request's payload in place; return the
+        rejection reason (None = admissible)."""
         if (req.window is None) == (req.intensities is None):
-            raise ValueError(f"request {req.rid}: provide exactly one "
-                             "of window / intensities")
+            return (f"request {req.rid}: provide exactly one of "
+                    "window / intensities")
         if req.window is not None:
             window = np.asarray(req.window, np.uint32)
             if window.ndim != 2 or window.shape[1] != self.words:
-                raise ValueError(f"request {req.rid}: window must be "
-                                 f"uint32[T, {self.words}], got "
-                                 f"{window.shape}")
+                return (f"request {req.rid}: window must be "
+                        f"uint32[T, {self.words}], got {window.shape}")
             req.window = window
-        else:
-            inten = np.asarray(req.intensities, np.uint8)
-            if inten.ndim != 1 or inten.shape[0] > self.n_inputs:
-                raise ValueError(f"request {req.rid}: intensities must "
-                                 f"be uint8[<= {self.n_inputs}], got "
-                                 f"{inten.shape}")
-            if req.n_steps is None or req.n_steps < 1:
-                raise ValueError(f"request {req.rid}: intensity "
-                                 "requests need n_steps >= 1")
-            req.intensities = inten
-            if req.seed is None:
-                req.seed = self.engine.plan.encode_seed + req.rid
+            return None
+        inten = np.asarray(req.intensities, np.uint8)
+        if inten.ndim != 1 or inten.shape[0] > self.n_inputs:
+            return (f"request {req.rid}: intensities must be "
+                    f"uint8[<= {self.n_inputs}], got {inten.shape}")
+        if req.n_steps is None or req.n_steps < 1:
+            return (f"request {req.rid}: intensity requests need "
+                    "n_steps >= 1")
+        req.intensities = inten
+        if req.seed is None:
+            req.seed = self.plan.encode_seed + req.rid
+        return None
+
+    def submit(self, req: SNNRequest) -> bool:
+        """Admit a request, or reject it *structurally*: a malformed or
+        backpressured request ends as ``REJECTED`` with ``error`` set —
+        nothing raises, so one bad request can never strand the queue.
+        Returns whether the request was admitted."""
+        error = self._validate(req)
+        if error is None and self.policy.max_queue is not None \
+                and len(self.queue) >= self.policy.max_queue:
+            error = (f"request {req.rid}: queue full "
+                     f"(max_queue={self.policy.max_queue}), "
+                     "backpressure reject")
+        if error is not None:
+            req.status, req.error, req.done = REJECTED, error, True
+            self.rejected += 1
+            return False
+        if req.deadline_ms is None:
+            req.deadline_ms = self.policy.deadline_ms
+        req.t_submit_ms = _now_ms()
+        req.status = QUEUED
         self.queue.append(req)
+        return True
 
     def _t_quantum(self) -> int:
-        tc = self.engine.plan.t_chunk
+        tc = self.plan.t_chunk
         return tc if tc is not None else _T_QUANTUM
 
     @staticmethod
@@ -127,13 +305,49 @@ class SNNServingEngine:
         return (req.window.shape[0] if req.window is not None
                 else req.n_steps)
 
+    def _form_batch(self) -> tuple[list[SNNRequest], int]:
+        """Expire overdue queued requests, then pull up to ``max_batch``
+        highest-priority-first (stable, so FIFO within a priority).
+        Returns (batch, n_expired)."""
+        now = _now_ms()
+        live: list[SNNRequest] = []
+        n_expired = 0
+        for r in self.queue:
+            if (r.deadline_ms is not None
+                    and now - r.t_submit_ms > r.deadline_ms):
+                r.service_ms = now - r.t_submit_ms
+                self._finish(r, EXPIRED,
+                             f"request {r.rid}: deadline "
+                             f"{r.deadline_ms}ms exceeded in queue")
+                n_expired += 1
+            else:
+                live.append(r)
+        live.sort(key=lambda r: -r.priority)
+        batch, self.queue = live[:self.plan.max_batch], \
+            live[self.plan.max_batch:]
+        return batch, n_expired
+
+    def _finish(self, req: SNNRequest, status: str,
+                error: str | None = None) -> None:
+        req.status, req.error, req.done = status, error, True
+        if status == EXPIRED:
+            self.expired += 1
+        elif status == FAILED:
+            self.failed += 1
+
     # --- serve ---------------------------------------------------------
 
-    def _serve_intensities(self, batch, t_pad: int) -> np.ndarray:
+    def _engine_for(self, level: int) -> SNNEngine:
+        if level not in self._engines:
+            self._engines[level] = SNNEngine(self._plans[level])
+        return self._engines[level]
+
+    def _serve_intensities(self, eng: SNNEngine, batch,
+                           t_pad: int) -> np.ndarray:
         """One in-kernel-encode launch: uint8 intensities + ragged
         lengths in, counts out; the batch tail pads with zero intensity
         (silent) and t_total=0."""
-        plan = self.engine.plan
+        plan = eng.plan
         inten = np.zeros((plan.max_batch, self.n_inputs), np.uint8)
         seeds = np.zeros((plan.max_batch,), np.int32)
         t_total = np.zeros((plan.max_batch,), np.int32)
@@ -141,15 +355,16 @@ class SNNServingEngine:
             inten[i, :r.intensities.shape[0]] = r.intensities
             seeds[i] = r.seed
             t_total[i] = r.n_steps
-        return np.asarray(self.engine.infer(
+        return np.asarray(eng.infer(
             self.weights, intensities=jnp.asarray(inten),
             seeds=jnp.asarray(seeds), n_steps=t_pad,
             t_total=jnp.asarray(t_total)))
 
-    def _serve_windows(self, batch, t_pad: int) -> np.ndarray:
+    def _serve_windows(self, eng: SNNEngine, batch,
+                       t_pad: int) -> np.ndarray:
         """One pre-packed launch; intensity requests in a mixed batch
         are host-encoded here (bit-exact with the kernel draw)."""
-        plan = self.engine.plan
+        plan = eng.plan
         stacked = np.zeros((plan.max_batch, t_pad, self.words),
                            np.uint32)
         for i, r in enumerate(batch):
@@ -159,47 +374,208 @@ class SNNServingEngine:
                     r.seed, jnp.asarray(r.intensities), r.n_steps))
             stacked[i, :win.shape[0], :win.shape[1]] = win
         return np.asarray(
-            self.engine.infer(self.weights, jnp.asarray(stacked)))
+            eng.infer(self.weights, jnp.asarray(stacked)))
 
-    def step(self) -> int:
-        """Admit + serve one batch.  Returns requests completed."""
-        plan = self.engine.plan
-        batch: list[SNNRequest] = []
-        while self.queue and len(batch) < plan.max_batch:
-            batch.append(self.queue.popleft())
-        if not batch:
-            return 0
-        t0 = time.perf_counter()
-        q = self._t_quantum()
-        t_pad = -(-max(self._t_len(r) for r in batch) // q) * q
+    def _launch_counts(self, batch, t_pad: int, level: int, *,
+                       hooked: bool = True, attempt: int = 0,
+                       kind: str = "serve") -> np.ndarray:
+        """One serve launch at one degradation rung.  The ``on_launch``
+        hook runs first (fault injection: may raise, stall, or return a
+        count-corruption callable) — except on ``kind="fallback"``
+        oracle re-serves, which are never hooked."""
+        eng = self._engine_for(level)
+        corrupt = None
+        if hooked and self.on_launch is not None:
+            corrupt = self.on_launch({
+                "step": self.steps, "attempt": attempt, "level": level,
+                "kind": kind, "batch_size": len(batch), "t_pad": t_pad,
+                "t_lens": [self._t_len(r) for r in batch]})
+        plan = eng.plan
         intensity_only = all(r.window is None for r in batch)
         if (intensity_only and plan.encode == "kernel"
                 and plan.cycle_backend == "window"):
-            counts = self._serve_intensities(batch, t_pad)
+            counts = self._serve_intensities(eng, batch, t_pad)
         else:
-            counts = self._serve_windows(batch, t_pad)
+            counts = self._serve_windows(eng, batch, t_pad)
+        if corrupt is not None:
+            counts = np.asarray(corrupt(counts))
+        return counts
+
+    def _degrade(self, reason: str) -> None:
+        frm = self.level
+        self.level += 1
+        self.degraded += 1
+        self.healthy_steps = 0
+        plan = self._plans[self.level]
+        self.degradation_events.append({
+            "step": self.steps, "from": frm, "to": self.level,
+            "encode": plan.encode, "kernel_backend": plan.kernel_backend,
+            "reason": reason})
+
+    def _launch_with_recovery(self, batch, t_pad: int
+                              ) -> np.ndarray | None:
+        """Bounded-retry launch with graceful degradation: re-attempt at
+        the current rung up to ``max_retries`` times, then step down the
+        ladder and re-run the budget; None once every rung is spent
+        (the batch fails)."""
+        pol = self.policy
+        max_level = len(self._plans) - 1
+        while True:
+            attempts = 0
+            while True:
+                try:
+                    return self._launch_counts(batch, t_pad, self.level,
+                                               attempt=attempts)
+                except Exception as e:  # noqa: BLE001 — contain faults
+                    self._step_faults += 1
+                    self._last_error = f"{type(e).__name__}: {e}"
+                    if attempts >= pol.max_retries:
+                        break
+                    attempts += 1
+                    self.retried += 1
+                    for r in batch:
+                        r.retries += 1
+                    if pol.retry_backoff_ms:
+                        time.sleep(pol.retry_backoff_ms
+                                   * 2 ** (attempts - 1) / 1e3)
+            if pol.degrade_on_failure and self.level < max_level:
+                self._degrade(f"launch failed after {attempts + 1} "
+                              f"attempts: {self._last_error}")
+                continue
+            return None
+
+    def _integrity_guard(self, batch, counts: np.ndarray, t_pad: int
+                         ) -> tuple[np.ndarray, set[int]]:
+        """Enforce ``0 <= counts <= t_total`` per slot; violating slots
+        are re-served on the most-degraded oracle rung with the launch
+        hook bypassed.  Returns (repaired counts, slots that could not
+        be repaired)."""
+        bad = [i for i, r in enumerate(batch)
+               if (counts[i] < 0).any()
+               or (counts[i] > self._t_len(r)).any()]
+        if not bad:
+            return counts, set()
+        self.integrity_failures += len(bad)
+        self._step_faults += len(bad)
+        counts = np.array(counts)
+        unrepaired: set[int] = set()
+        try:
+            good = self._launch_counts([batch[i] for i in bad], t_pad,
+                                       len(self._plans) - 1,
+                                       hooked=False, kind="fallback")
+            for j, i in enumerate(bad):
+                counts[i] = good[j]
+        except Exception as e:  # noqa: BLE001 — oracle re-serve failed
+            self._last_error = f"{type(e).__name__}: {e}"
+            unrepaired = set(bad)
+        if (self.policy.degrade_on_integrity
+                and self.level < len(self._plans) - 1):
+            self._degrade(f"integrity violation in {len(bad)} slot(s)")
+        return counts, unrepaired
+
+    def _canary_check(self) -> None:
+        """Known-answer probe: serve a fixed window through the current
+        rung (hook included) and compare with golden ref-path counts —
+        catches in-range corruption the range guard cannot."""
+        plan = self.plan
+        if self._canary_window is None:
+            inten = jnp.full((self.n_inputs,), 128, jnp.uint8)
+            win = np.asarray(encode_from_counter(
+                _CANARY_SEED, inten, self.policy.canary_steps),
+                dtype=np.uint32)
+            self._canary_window = win
+            self._canary_golden = np.asarray(ops.infer_window_batch(
+                self.weights, jnp.asarray(win)[None],
+                threshold=plan.threshold, leak=plan.leak,
+                backend="ref"))[0]
+        req = SNNRequest(rid=-1, window=self._canary_window)
+        q = self._t_quantum()
+        t_pad = -(-self.policy.canary_steps // q) * q
+        self.canary_checks += 1
+        try:
+            got = self._launch_counts([req], t_pad, self.level,
+                                      kind="canary")[0]
+            ok = bool(np.array_equal(got, self._canary_golden))
+        except Exception as e:  # noqa: BLE001 — canary launch died
+            self._last_error = f"{type(e).__name__}: {e}"
+            ok = False
+        if not ok:
+            self.canary_failures += 1
+            self._step_faults += 1
+            if (self.policy.degrade_on_integrity
+                    and self.level < len(self._plans) - 1):
+                self._degrade("canary mismatch vs golden counts")
+
+    def step(self) -> int:
+        """Admit + serve one batch.  Returns the number of requests
+        reaching a terminal status this step; never raises — launch
+        faults retry, degrade, and at worst end the batch ``FAILED``."""
+        pol = self.policy
+        batch, finished = self._form_batch()
+        if not batch:
+            return finished
+        t0 = time.perf_counter()
+        t_start_ms = t0 * 1e3
+        self._step_faults = 0
+        q = self._t_quantum()
+        t_pad = -(-max(self._t_len(r) for r in batch) // q) * q
+        counts = self._launch_with_recovery(batch, t_pad)
+        unrepaired: set[int] = set()
+        if counts is not None:
+            counts, unrepaired = self._integrity_guard(batch, counts,
+                                                       t_pad)
+        now_ms = _now_ms()
         for i, r in enumerate(batch):
+            r.queue_wait_ms = t_start_ms - r.t_submit_ms
+            r.service_ms = now_ms - r.t_submit_ms
+            if counts is None or i in unrepaired:
+                self._finish(r, FAILED, f"request {r.rid}: "
+                             f"{self._last_error}")
+                continue
             r.counts = counts[i]
             if self.neuron_class is not None:
                 r.pred = int(self.neuron_class[int(np.argmax(counts[i]))])
-            r.done = True
-        dt = time.perf_counter() - t0
+            self.queue_wait_ms.append(r.queue_wait_ms)
+            self.service_ms.append(r.service_ms)
+            self._finish(r, SERVED)
+            self.windows_served += 1
+        finished += len(batch)
         self.steps += 1
         self.batches += 1
-        self.windows_served += len(batch)
-        self.slots_offered += plan.max_batch
-        self.slots_padded += plan.max_batch - len(batch)
+        self.slots_offered += self.plan.max_batch
+        self.slots_padded += self.plan.max_batch - len(batch)
+        if pol.canary_every and self.steps % pol.canary_every == 0:
+            self._canary_check()
+        if self._step_faults == 0:
+            self.healthy_steps += 1
+            if (self.level > 0 and pol.reprobe_after is not None
+                    and self.healthy_steps >= pol.reprobe_after):
+                self.degradation_events.append({
+                    "step": self.steps, "from": self.level, "to": 0,
+                    "encode": self.plan.encode,
+                    "kernel_backend": self.plan.kernel_backend,
+                    "reason": f"re-probe after {self.healthy_steps} "
+                              "healthy steps"})
+                self.level = 0
+                self.healthy_steps = 0
+        else:
+            self.healthy_steps = 0
+        dt = time.perf_counter() - t0
         self.step_seconds += dt
         self.last_step_seconds = dt
-        return len(batch)
+        return finished
 
     def run(self, requests: list[SNNRequest], max_steps: int = 10_000
             ) -> list[SNNRequest]:
+        """Submit everything through the structured-rejection path, then
+        step until every request is terminal (a rejected request never
+        strands the rest)."""
         for r in requests:
-            self.submit(r)
+            if r.status == "NEW":
+                self.submit(r)
         steps = 0
-        while any(not r.done for r in requests) and steps < max_steps:
-            if self.step() == 0:
+        while any(not r.terminal for r in requests) and steps < max_steps:
+            if self.step() == 0 and not self.queue:
                 break
             steps += 1
         return requests
@@ -213,6 +589,10 @@ class SNNServingEngine:
             return 0.0
         return self.slots_padded / self.slots_offered
 
+    @staticmethod
+    def _pctl(xs: list[float], p: float) -> float:
+        return round(float(np.percentile(xs, p)), 3) if xs else 0.0
+
     def stats(self) -> dict:
         """Serving counters for the ``--bench`` report."""
         return {
@@ -222,4 +602,18 @@ class SNNServingEngine:
             "mean_step_ms": round(
                 1e3 * self.step_seconds / max(self.batches, 1), 3),
             "last_step_ms": round(1e3 * self.last_step_seconds, 3),
+            # --- robustness ------------------------------------------
+            "rejected": self.rejected,
+            "expired": self.expired,
+            "failed": self.failed,
+            "retried": self.retried,
+            "degraded": self.degraded,
+            "integrity_failures": self.integrity_failures,
+            "canary_checks": self.canary_checks,
+            "canary_failures": self.canary_failures,
+            "level": self.level,
+            "queue_wait_ms_p50": self._pctl(self.queue_wait_ms, 50),
+            "queue_wait_ms_p99": self._pctl(self.queue_wait_ms, 99),
+            "service_ms_p50": self._pctl(self.service_ms, 50),
+            "service_ms_p99": self._pctl(self.service_ms, 99),
         }

@@ -94,11 +94,15 @@ def test_sharded_serving_matches_unsharded():
         np.testing.assert_array_equal(a.counts, b.counts)
 
 
-def test_submit_validates_window_shape():
+def test_submit_rejects_bad_window_shape_structurally():
+    """Invalid requests no longer raise out of submit(): they end
+    REJECTED with the reason recorded."""
     eng = SNNServingEngine(_weights(), PLAN)
-    with pytest.raises(ValueError):
-        eng.submit(SNNRequest(rid=0, window=np.zeros((10, W + 1),
-                                                     np.uint32)))
+    req = SNNRequest(rid=0, window=np.zeros((10, W + 1), np.uint32))
+    assert eng.submit(req) is False
+    assert req.status == "REJECTED" and req.done
+    assert "window" in req.error
+    assert eng.stats()["rejected"] == 1
 
 
 def test_serving_requires_positive_threshold():
@@ -170,19 +174,42 @@ def test_sharded_intensity_serving_matches_unsharded():
         np.testing.assert_array_equal(a.counts, b.counts)
 
 
-def test_submit_validates_intensity_requests():
+def test_submit_rejects_invalid_intensity_requests_structurally():
     eng = SNNServingEngine(_weights(), PLAN)
-    with pytest.raises(ValueError):        # both forms
-        eng.submit(SNNRequest(rid=0, window=np.zeros((4, W), np.uint32),
-                              intensities=np.zeros(8, np.uint8),
-                              n_steps=4))
-    with pytest.raises(ValueError):        # neither form
-        eng.submit(SNNRequest(rid=1))
-    with pytest.raises(ValueError):        # missing n_steps
-        eng.submit(SNNRequest(rid=2, intensities=np.zeros(8, np.uint8)))
-    with pytest.raises(ValueError):        # too many inputs
-        eng.submit(SNNRequest(rid=3, n_steps=4, intensities=np.zeros(
-            W * 32 + 1, np.uint8)))
+    bad = [
+        SNNRequest(rid=0, window=np.zeros((4, W), np.uint32),
+                   intensities=np.zeros(8, np.uint8),
+                   n_steps=4),                                # both forms
+        SNNRequest(rid=1),                                    # neither
+        SNNRequest(rid=2, intensities=np.zeros(8, np.uint8)),  # no n_steps
+        SNNRequest(rid=3, n_steps=4,
+                   intensities=np.zeros(W * 32 + 1, np.uint8)),  # too big
+    ]
+    for req in bad:
+        assert eng.submit(req) is False
+        assert req.status == "REJECTED" and req.error
+    assert eng.stats()["rejected"] == len(bad)
+    assert not eng.queue
+
+
+def test_one_bad_request_cannot_strand_the_rest():
+    """run() pushes every request through the structured-rejection
+    path: the invalid one ends REJECTED, the rest are SERVED."""
+    eng = SNNServingEngine(_weights(), PLAN)
+    good1, bad, good2 = _request(0, 10), SNNRequest(rid=1), _request(2, 8)
+    eng.run([good1, bad, good2])
+    assert good1.status == "SERVED" and good2.status == "SERVED"
+    assert bad.status == "REJECTED" and bad.counts is None
+    assert good1.counts is not None and good2.counts is not None
+
+
+def test_neuron_class_length_validated_at_init():
+    with pytest.raises(ValueError):
+        SNNServingEngine(_weights(), PLAN,
+                         neuron_class=np.arange(N - 1))  # too short
+    with pytest.raises(ValueError):
+        SNNServingEngine(_weights(), PLAN,
+                         neuron_class=np.zeros((N, 2), np.int32))  # 2-D
 
 
 def test_serving_stats_track_waste_and_step_time():
@@ -241,6 +268,69 @@ def test_one_jit_trace_per_window_length_bucket(encode):
     assert (pp, enc) == (0, 0)
 
 
+@pytest.mark.parametrize("threshold", [1, 2])
+def test_ragged_padding_silent_at_threshold_boundary(threshold):
+    """The zero-pad silence invariant at its tightest boundary
+    (threshold == 1): after any true cycle v < threshold, and a zero
+    row only leaks, so padded cycles never fire.  Ragged batch counts
+    must equal each window served alone at its true length."""
+    import dataclasses
+
+    plan = dataclasses.replace(PLAN, threshold=threshold, leak=1)
+    weights = _weights(20 + threshold)
+    reqs = [_request(0, 5), _request(1, 9), _request(2, 12)]
+    eng = SNNServingEngine(weights, plan)
+    eng.run(reqs)
+    assert eng.batches == 1               # one padded launch
+    for r in reqs:
+        want = ops.infer_window_batch(
+            weights, jnp.asarray(r.window)[None],
+            threshold=threshold, leak=1)[0]
+        np.testing.assert_array_equal(r.counts, np.asarray(want))
+
+
+def test_threshold_one_intensity_t_total_mask_bit_exact():
+    """Same boundary for the intensity form, where raggedness is the
+    kernels' t_total SMEM mask rather than host zero-padding."""
+    import dataclasses
+
+    plan = dataclasses.replace(PLAN, threshold=1, leak=1,
+                               encode="kernel")
+    weights = _weights(23)
+    ragged = [_intensity_request(i, 10 - 3 * (i % 3)) for i in range(3)]
+    alone = [_intensity_request(i, 10 - 3 * (i % 3)) for i in range(3)]
+    eng = SNNServingEngine(weights, plan)
+    eng.run(ragged)
+    assert eng.batches == 1
+    for r in alone:
+        SNNServingEngine(weights, plan).run([r])
+    for a, b in zip(ragged, alone):
+        np.testing.assert_array_equal(a.counts, b.counts)
+
+
+def test_t_quantum_buckets_share_one_trace():
+    """_t_quantum buckets ragged T's to t_chunk multiples (default 8):
+    all lengths inside one bucket pad to the same launch shape, so they
+    share a single compiled trace."""
+    import dataclasses
+
+    plan = dataclasses.replace(PLAN, t_chunk=6)
+    eng = SNNServingEngine(_weights(24), plan)
+    assert eng._t_quantum() == 6
+
+    pp0 = ops.infer_window_batch._cache_size()
+    for t in (4, 5, 6):                   # all pad to T=6: one bucket
+        eng.run([_request(300 + t, t)])
+    assert ops.infer_window_batch._cache_size() - pp0 == 1
+    for t in (7, 11, 12):                 # all pad to T=12: one more
+        eng.run([_request(320 + t, t)])
+    assert ops.infer_window_batch._cache_size() - pp0 == 2
+
+    # default quantum (no t_chunk) buckets to multiples of 8
+    eng8 = SNNServingEngine(_weights(24), PLAN)
+    assert eng8._t_quantum() == 8
+
+
 def test_launch_serve_snn_cli_completes_requests():
     """Acceptance: repro.launch.serve --arch wenquxing-snn --requests 6
     completes every request through SNNServingEngine."""
@@ -253,6 +343,10 @@ def test_launch_serve_snn_cli_completes_requests():
         env=env, capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "wenquxing-snn: 6/6 done" in proc.stdout
+    assert "SERVED=6" in proc.stdout
+    assert "non-terminal=0" in proc.stdout
+    assert "oracle-check: ok" in proc.stdout
     assert "serve-bench:" in proc.stdout
     assert "padded_slot_waste=" in proc.stdout
     assert "mean_step_ms=" in proc.stdout
+    assert "service_ms_p99=" in proc.stdout
