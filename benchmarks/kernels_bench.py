@@ -387,6 +387,47 @@ def run() -> dict:
         reps=3, warmup=1)
     emit(f"kernels/encode-interp-{n}x{w * 32}xT{t_steps}c4", t_ie,
          "backend=interp")
+
+    # --- serving latency: queue-wait + service percentiles --------------
+    # End-to-end request latency through the dynamic-window-batching
+    # SNNServingEngine (intensity requests, ragged T's — the same path
+    # ``serve --bench`` reports).  One throwaway pass warms every
+    # window-length bucket's compile cache, then the latency lists are
+    # cleared so the measured pass sees steady-state serving only.  The
+    # percentiles land in BENCH_kernels.json as the committed baseline;
+    # run.py --gate fails when a percentile grows past
+    # GATE_LATENCY_RATIO x its baseline above an absolute floor — the
+    # increase direction, unlike the kernel speedup ratios which gate
+    # on drops.
+    from repro.engine import SNNEnginePlan
+    from repro.serving import SNNRequest, SNNServingEngine
+
+    n_req, n, w, t_steps = 32, 64, 8, 16
+    rng_l = np.random.default_rng(21)
+    s_weights = np.asarray(
+        rng_l.integers(0, 2**32, (n, w), dtype=np.uint32))
+    s_inten = rng_l.integers(0, 256, (n_req, w * 32), dtype=np.uint8)
+    plan_l = SNNEnginePlan(threshold=192, leak=16, n_syn=w * 32,
+                           encode="kernel", cycle_backend="window",
+                           max_batch=8, t_chunk=8)
+
+    def _latency_reqs(base):
+        return [SNNRequest(rid=base + i, intensities=s_inten[i],
+                           n_steps=t_steps - 4 * (i % 3))
+                for i in range(n_req)]
+
+    s_eng = SNNServingEngine(s_weights, plan_l)
+    s_eng.run(_latency_reqs(0))            # warm all T-bucket compiles
+    s_eng.queue_wait_ms.clear()
+    s_eng.service_ms.clear()
+    s_eng.run(_latency_reqs(n_req))        # measured steady-state pass
+    s_st = s_eng.stats()
+    lat_keys = ("queue_wait_ms_p50", "queue_wait_ms_p99",
+                "service_ms_p50", "service_ms_p99")
+    emit(f"serve/latency-{n}x{w * 32}xT{t_steps}r{n_req}", None,
+         ";".join(f"{k}={s_st[k]:.3f}" for k in lat_keys))
+    out[("serve-latency", n, w * 32, t_steps, n_req)] = {
+        k: s_st[k] for k in lat_keys}
     return out
 
 

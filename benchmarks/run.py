@@ -35,7 +35,11 @@ same process), so they gate the *structural* speedups rather than raw
 host wall-clock; because single-run wall clock still swings several-x
 on CI hosts, ``time_ratio`` only fails when a clearly-structural
 baseline row (>= ``GATE_TIME_BASE_MIN``) collapses below
-``GATE_TIME_FLOOR`` — the speedup is gone, not merely noisy.  ``--gate``
+``GATE_TIME_FLOOR`` — the speedup is gone, not merely noisy.  Serving
+latency percentiles (the ``serve/latency-*`` rows' ``*_ms_p50`` /
+``*_ms_p99`` metrics) gate the increase direction instead: they fail
+only past ``GATE_LATENCY_RATIO`` x baseline above an absolute
+``GATE_LATENCY_FLOOR_MS``.  ``--gate``
 without ``--json``, or without a loadable committed baseline, is a
 configuration error (exit 2), never a silent pass.  Without ``--gate``,
 regressions are printed as warnings only.
@@ -51,6 +55,17 @@ GATE_THRESHOLD = 0.25          # fail on >25% drop of a gated ratio
 GATE_TIME_BASE_MIN = 4.0       # only clearly-structural rows time-gate
 GATE_TIME_FLOOR = 1.25         # ...and only when the speedup is gone
 _GATED_METRICS = ("time_ratio", "bytes_ratio")
+
+# serving latency gates in the INCREASE direction: a percentile fails
+# only when it grows past GATE_LATENCY_RATIO x its committed baseline
+# AND lands above GATE_LATENCY_FLOOR_MS.  Steady-state percentiles on
+# this path measure ~1-2 ms warm; CI wall clock swings several-x, so
+# the 8x ratio + 10 ms absolute floor pass any noisy-but-healthy run
+# while a structural regression (per-batch recompile, a blocking refresh
+# in the serving step) lands orders of magnitude past both.
+GATE_LATENCY_RATIO = 8.0
+GATE_LATENCY_FLOOR_MS = 10.0
+_GATED_LATENCY_SUFFIXES = ("_ms_p50", "_ms_p99")
 
 
 def archive_history(rows: dict, history_dir: str) -> str:
@@ -98,6 +113,14 @@ def check_regressions(baseline: dict, rows: dict,
     structural speedup (>= GATE_TIME_BASE_MIN) and the new ratio fell
     below GATE_TIME_FLOOR — i.e. the batched/fused path degraded to
     ~sequential speed, not merely a noisy-but-still-fast run.
+
+    Serving-latency percentiles (``*_ms_p50``/``*_ms_p99`` metrics on
+    the ``serve/latency-*`` rows) gate the opposite direction: bigger
+    is worse.  They fail only when the new value exceeds BOTH
+    ``GATE_LATENCY_RATIO`` x the baseline and the absolute
+    ``GATE_LATENCY_FLOOR_MS`` — so host-speed noise on a ~1-2 ms
+    percentile never gates, but a serving step that started
+    recompiling or blocking does.
     """
     msgs = []
     for name in sorted(set(baseline) & set(rows)):
@@ -115,6 +138,19 @@ def check_regressions(baseline: dict, rows: dict,
                     f"{name}: {metric} {ov:.2f} -> {nv:.2f} "
                     f"({(nv / ov - 1.0) * 100:+.0f}%, gate is "
                     f"-{threshold * 100:.0f}%)")
+        for metric in sorted(set(old) & set(new)):
+            if not metric.endswith(_GATED_LATENCY_SUFFIXES):
+                continue
+            ov, nv = old[metric], new[metric]
+            if not (isinstance(ov, (int, float))
+                    and isinstance(nv, (int, float))):
+                continue
+            if (nv >= GATE_LATENCY_FLOOR_MS
+                    and nv > max(ov, 1e-6) * GATE_LATENCY_RATIO):
+                msgs.append(
+                    f"{name}: {metric} {ov:.3f}ms -> {nv:.3f}ms "
+                    f"(latency gate is {GATE_LATENCY_RATIO:.0f}x above "
+                    f"{GATE_LATENCY_FLOOR_MS:.0f}ms)")
     return msgs
 
 # NOTE: the sharded-window benchmark row needs a multi-device mesh;

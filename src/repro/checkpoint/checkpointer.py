@@ -88,6 +88,20 @@ class CheckpointManager:
             self._pending.join()
             self._pending = None
 
+    def purge_tmp(self) -> list[str]:
+        """Remove ``step_N.tmp/`` droppings left by writers that died
+        mid-save (a crash before the atomic rename).  Restore already
+        ignores them; purging on recovery keeps the directory from
+        accumulating torn state.  Returns the purged directory names.
+        Call only when no save is in flight (e.g. at restore time)."""
+        self.wait()
+        purged = []
+        for p in self.dir.glob("step_*.tmp"):
+            if p.is_dir():
+                shutil.rmtree(p, ignore_errors=True)
+                purged.append(p.name)
+        return purged
+
     def _rotate(self) -> None:
         steps = sorted(self.all_steps())
         for s in steps[:-self.keep]:

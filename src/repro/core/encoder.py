@@ -77,21 +77,34 @@ def encode_from_counter(seed, intensities: jnp.ndarray, n_steps: int,
     return pack(bits)
 
 
-def sample_seeds(base, n: int) -> jnp.ndarray:
-    """Per-sample counter seeds i32[n] derived from one base seed.
+def sample_seeds(base, n: int, epoch: int = 0) -> jnp.ndarray:
+    """Per-sample counter seeds i32[n] derived from ``(base, epoch)``.
 
     One :func:`lfsr.counter_hash` draw per sample index (cycle axis =
-    sample, lane axis 0), so consecutive samples get decorrelated seed
-    values rather than consecutive integers.  Device-independent and
-    stateless — any shard, chunk or epoch regenerates sample i's seed
-    (and therefore its whole spike window) from (base, i) alone, which
-    is what keeps every (data, neurons) mesh factorization bit-exact.
-    The int32 cast is a wrapping bit-cast; the encode path reads the
-    seeds back as uint32.
+    sample, lane axis = epoch), so consecutive samples get decorrelated
+    seed values rather than consecutive integers, and every ``epoch``
+    gets fresh Poisson draws for the same samples at zero memory cost —
+    the train-while-serving refresh path re-presents the dataset with
+    new stochastic windows each refresh epoch.  ``epoch=0`` is
+    bit-exact with the historical single-epoch derivation.
+    Device-independent and stateless — any shard, chunk or epoch
+    regenerates sample i's seed (and therefore its whole spike window)
+    from (base, epoch, i) alone, which is what keeps every (data,
+    neurons) mesh factorization bit-exact.  The int32 cast is a
+    wrapping bit-cast; the encode path reads the seeds back as uint32.
     """
-    idx = jnp.arange(n, dtype=jnp.uint32)
-    return lfsr.counter_hash(jnp.asarray(base, jnp.uint32), idx,
-                             jnp.uint32(0)).astype(jnp.int32)
+    return sample_seeds_at(base, jnp.arange(n, dtype=jnp.uint32), epoch)
+
+
+def sample_seeds_at(base, idx, epoch: int = 0) -> jnp.ndarray:
+    """Seeds for explicit sample indices ``idx`` (i32/u32[...]) —
+    ``sample_seeds(base, n, epoch)[idx]`` without materializing the
+    full range, so error-subset re-presentations and refresh slices
+    keep each sample's original (base, epoch, index) derivation."""
+    return lfsr.counter_hash(jnp.asarray(base, jnp.uint32),
+                             jnp.asarray(idx, jnp.uint32),
+                             jnp.asarray(epoch, jnp.uint32)
+                             ).astype(jnp.int32)
 
 
 def encode_from_counter_batch(seeds, intensities: jnp.ndarray,

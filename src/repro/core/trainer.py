@@ -50,7 +50,8 @@ import numpy as np
 
 from repro.core.bitpack import n_words
 from repro.core.encoder import (poisson_encode_batch,
-                                quantize_intensities, sample_seeds)
+                                quantize_intensities, sample_seeds,
+                                sample_seeds_at)
 from repro.core.lif import LIFParams, lif_params
 from repro.core.rvsnn import snn_regfile, snn_regfile_batch
 from repro.core.stdp import STDPParams, init_weights, stdp_params
@@ -133,17 +134,21 @@ def _train_block(cfg: SNNTrainConfig, key: jax.Array,
                  labels: jnp.ndarray, block_idx: int, *,
                  spike_trains: jnp.ndarray | None = None,
                  intensities: jnp.ndarray | None = None,
-                 seeds: jnp.ndarray | None = None) -> jnp.ndarray:
+                 sample_idx: jnp.ndarray | None = None) -> jnp.ndarray:
     """Train one 10-neuron block online over (possibly repeated) samples.
 
     The sample stream is EITHER pre-encoded ``spike_trains``
     uint32[N, T, w] (``encode="host"``) OR uint8 ``intensities``
-    [N, n_inputs] with per-sample counter ``seeds`` i32[N] — the
-    intensity-resident path, where each presentation's window is drawn
-    from the counter hash at use.  ``key`` seeds the block's LFSR lanes
-    (stochastic-STDP randomness), so per-block randomness is keyed; the
-    default ``train()`` key chain is derived from ``cfg.seed``, keeping
-    default-seed runs reproducible.
+    [N, n_inputs] with their original dataset indices ``sample_idx``
+    i32[N] — the intensity-resident path, where each presentation's
+    window is drawn from the counter hash at use.  Counter seeds are
+    epoch-keyed (``sample_seeds_at(encode_seed, idx, epoch)``), so each
+    epoch re-presents the same samples with fresh Poisson draws at zero
+    memory cost; epoch 0 is bit-exact with the historical derivation.
+    ``key`` seeds the block's LFSR lanes (stochastic-STDP randomness),
+    so per-block randomness is keyed; the default ``train()`` key chain
+    is derived from ``cfg.seed``, keeping default-seed runs
+    reproducible.
     """
     w0 = init_weights(cfg.n_classes, cfg.words, dense=True)
     rf = snn_regfile(w0, seed=_regfile_seed(key))
@@ -154,9 +159,10 @@ def _train_block(cfg: SNNTrainConfig, key: jax.Array,
     if intensities is not None:
         step = jax.jit(functools.partial(_engine.train_stream, eng,
                                          n_steps=cfg.n_steps))
-        for _ in range(cfg.epochs):
+        for epoch in range(cfg.epochs):
             rf, _ = step(rf, teach=teach, intensities=intensities,
-                         seeds=seeds)
+                         seeds=sample_seeds_at(cfg.encode_seed,
+                                               sample_idx, epoch))
         return rf.weights
     step = jax.jit(functools.partial(_engine.train_stream, eng))
     for _ in range(cfg.epochs):
@@ -168,7 +174,7 @@ def _train_blocks_parallel(cfg: SNNTrainConfig, key: jax.Array,
                            labels: jnp.ndarray, *,
                            spike_trains: jnp.ndarray | None = None,
                            intensities: jnp.ndarray | None = None,
-                           seeds: jnp.ndarray | None = None
+                           sample_idx: jnp.ndarray | None = None
                            ) -> jnp.ndarray:
     """Train all blocks concurrently on the full set (batched grid).
 
@@ -180,9 +186,11 @@ def _train_blocks_parallel(cfg: SNNTrainConfig, key: jax.Array,
     ``cfg.stdp(block_idx)`` schedule.  With ``cfg.mesh_shape`` the
     launch shards block streams over the "data" axis and neuron rows
     over "neurons" — the 2-D data-parallel training sweep.  The sample
-    stream is pre-encoded windows OR uint8 intensities + per-sample
-    seeds (shared across blocks, exactly as the broadcast spike trains
-    were).  Returns packed weights uint32[n_neurons, words].
+    stream is pre-encoded windows OR uint8 intensities + their dataset
+    indices ``sample_idx`` (shared across blocks, exactly as the
+    broadcast spike trains were); counter seeds are epoch-keyed, so
+    every epoch draws fresh windows.  Returns packed weights
+    uint32[n_neurons, words].
     """
     b = cfg.n_blocks
     w0 = jnp.broadcast_to(
@@ -206,9 +214,10 @@ def _train_blocks_parallel(cfg: SNNTrainConfig, key: jax.Array,
         step = jax.jit(functools.partial(_engine.train_stream_batch,
                                          eng, ltp_prob=lp,
                                          n_steps=cfg.n_steps))
-        for _ in range(cfg.epochs):
+        for epoch in range(cfg.epochs):
             rfs, _ = step(rfs, teach=teach_b, intensities=inten_b,
-                          seeds=seeds)
+                          seeds=sample_seeds_at(cfg.encode_seed,
+                                                sample_idx, epoch))
         return rfs.weights.reshape(b * cfg.n_classes, cfg.words)
     trains_b = jnp.broadcast_to(spike_trains, (b,) + spike_trains.shape)
     step = jax.jit(functools.partial(_engine.train_stream_batch, eng,
@@ -258,7 +267,10 @@ def train(cfg: SNNTrainConfig, images: np.ndarray, labels: np.ndarray,
     JAX PRNG (the legacy fallback); "kernel" quantizes ONCE to
     uint8[N, n_inputs] + per-sample counter-hash seeds and every
     presentation draws its window inside the kernels — the N×T×w
-    tensor is never materialized.
+    tensor is never materialized.  Kernel-path seeds are epoch-keyed
+    (``sample_seeds(base, n, epoch)``): each training epoch re-presents
+    the samples with fresh Poisson draws at zero memory cost, and epoch
+    0 stays bit-exact with the historical seeds.
     """
     if cfg.train_mode not in ("active", "parallel"):
         raise ValueError(f"train_mode must be 'active' or 'parallel', "
@@ -273,29 +285,30 @@ def train(cfg: SNNTrainConfig, images: np.ndarray, labels: np.ndarray,
         intensities = quantize_intensities(
             jnp.asarray(images, jnp.float32))
         seeds = sample_seeds(cfg.encode_seed, intensities.shape[0])
+        sample_idx = jnp.arange(intensities.shape[0], dtype=jnp.int32)
     else:
         spike_trains = poisson_encode_batch(
             ek, jnp.asarray(images, jnp.float32), cfg.n_steps)
-        intensities = seeds = None
+        intensities = seeds = sample_idx = None
 
     if cfg.train_mode == "parallel":
         key, bk = jax.random.split(key)
         weights = _train_blocks_parallel(
             cfg, bk, labels_j, spike_trains=spike_trains,
-            intensities=intensities, seeds=seeds)
+            intensities=intensities, sample_idx=sample_idx)
         classes = jnp.tile(jnp.arange(cfg.n_classes, dtype=jnp.int32),
                            cfg.n_blocks)
         return SNNModel(weights, classes, cfg)
 
     blocks: list[jnp.ndarray] = []
     classes: list[jnp.ndarray] = []
-    cur = (spike_trains, intensities, seeds, labels_j)
+    cur = (spike_trains, intensities, sample_idx, labels_j)
     for b in range(cfg.n_blocks):
-        cur_trains, cur_inten, cur_seeds, cur_labels = cur
+        cur_trains, cur_inten, cur_idx, cur_labels = cur
         key, bk = jax.random.split(key)
         blocks.append(_train_block(
             cfg, bk, cur_labels, b, spike_trains=cur_trains,
-            intensities=cur_inten, seeds=cur_seeds))
+            intensities=cur_inten, sample_idx=cur_idx))
         classes.append(jnp.arange(cfg.n_classes, dtype=jnp.int32))
         if b + 1 == cfg.n_blocks:
             break
@@ -310,10 +323,11 @@ def train(cfg: SNNTrainConfig, images: np.ndarray, labels: np.ndarray,
         if not err.any():
             break
         idx = np.where(err)[0]
-        # error samples keep their ORIGINAL windows: same spike train /
-        # same (seed, intensity) pair on every re-presentation
+        # error samples keep their ORIGINAL dataset indices: the same
+        # (seed, epoch, intensity) derivation on every re-presentation
         if intensities is not None:
-            cur = (None, intensities[idx], seeds[idx], labels_j[idx])
+            cur = (None, intensities[idx], sample_idx[idx],
+                   labels_j[idx])
         else:
             cur = (spike_trains[idx], None, None, labels_j[idx])
     return SNNModel(jnp.concatenate(blocks, axis=0),

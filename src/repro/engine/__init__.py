@@ -37,10 +37,11 @@ unsharded path.  The legacy entrypoints remain as deprecation wrappers
 with byte-identical outputs.
 """
 
-from repro.engine.engine import (SNNEngine, SNNOutput,
+from repro.engine.engine import (SNNEngine, SNNOutput, refresh_weights,
                                  reset_between_samples, train_stream,
                                  train_stream_batch)
 from repro.engine.plan import SNNEnginePlan, plan_from_config
 
 __all__ = ["SNNEngine", "SNNEnginePlan", "SNNOutput", "plan_from_config",
-           "reset_between_samples", "train_stream", "train_stream_batch"]
+           "refresh_weights", "reset_between_samples", "train_stream",
+           "train_stream_batch"]

@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.encoder import encode_from_counter, encode_windows_host
-from repro.core.rvsnn import SnnRegFile, snn_regfile, snn_step
+from repro.core.rvsnn import (SnnRegFile, snn_regfile, snn_regfile_batch,
+                              snn_step)
 from repro.core.stdp import STDPParams
 from repro.engine.plan import SNNEnginePlan
 from repro.kernels import ops
@@ -422,3 +423,68 @@ def train_stream_batch(engine: SNNEngine, rfs: SnnRegFile,
 
     rfs_out, counts = jax.lax.scan(body, rfs, (trains_t, teach_t))
     return rfs_out, jnp.swapaxes(counts, 0, 1)
+
+
+def refresh_weights(engine: SNNEngine, weights: jnp.ndarray, *,
+                    labels: jnp.ndarray, n_classes: int,
+                    teach_pos: int = 64, teach_neg: int = -1024,
+                    intensities: jnp.ndarray | None = None, seeds=None,
+                    n_steps: int | None = None,
+                    spike_trains: jnp.ndarray | None = None,
+                    lfsr_seeds=None, ltp_prob=None) -> jnp.ndarray:
+    """One online-STDP refresh pass over a PACKED population bank — the
+    train-while-serving verb.
+
+    ``weights`` is a serving-shaped uint32[n, w] bank whose n =
+    blocks × ``n_classes`` rows follow the block layout the trainer
+    emits (neuron i's class is ``i % n_classes``).  The bank is
+    reshaped into per-block regfiles and every labeled sample is one
+    data-parallel :meth:`SNNEngine.train_batch` launch across all
+    blocks — on the plan's mesh placement when one is present — then
+    reshaped back, so a serving engine can periodically push live
+    traffic (or a replay buffer) through the SU and obtain a refreshed
+    *candidate* bank without ever mutating the serving copy.
+
+    Samples are uint8 ``intensities`` [N, n_in] + counter ``seeds``
+    i32[N] with ``n_steps`` (the intensity-resident form; pass
+    epoch-keyed seeds for fresh draws per refresh) OR pre-packed
+    ``spike_trains`` uint32[N, T, w].  ``teach_pos``/``teach_neg``
+    build the supervision currents from ``labels`` exactly as the
+    trainer does; ``lfsr_seeds`` (one per block, default a fixed
+    decorrelated chain) key the stochastic-STDP lanes; ``ltp_prob``
+    optionally carries a per-block i32[B] schedule.  Returns the
+    refreshed bank uint32[n, w]; the input bank is never modified.
+    """
+    if not engine.plan.learn:
+        raise ValueError("refresh_weights needs a learning plan "
+                         "(w_exp is None)")
+    n, w = int(weights.shape[0]), int(weights.shape[1])
+    if n % n_classes:
+        raise ValueError(f"weight bank rows ({n}) must be a multiple "
+                         f"of n_classes ({n_classes})")
+    b = n // n_classes
+    w_b = jnp.asarray(weights, jnp.uint32).reshape(b, n_classes, w)
+    if lfsr_seeds is None:
+        # fixed decorrelated per-block chain (0x9E37 Weyl step, as
+        # lfsr.seed uses internally); refresh determinism comes from
+        # the caller's epoch-keyed sample seeds, not the LFSR bases
+        lfsr_seeds = [(0x22A + 0x9E37 * i) & 0xFFFF or 0xACE1
+                      for i in range(b)]
+    rfs = snn_regfile_batch(w_b, lfsr_seeds)
+    onehot = jax.nn.one_hot(jnp.asarray(labels, jnp.int32), n_classes,
+                            dtype=jnp.int32)
+    teach = onehot * teach_pos + (1 - onehot) * teach_neg
+    teach_b = jnp.broadcast_to(teach, (b,) + teach.shape)
+    if intensities is not None:
+        inten_b = jnp.broadcast_to(intensities,
+                                   (b,) + intensities.shape)
+        rfs, _ = train_stream_batch(engine, rfs, teach=teach_b,
+                                    ltp_prob=ltp_prob,
+                                    intensities=inten_b, seeds=seeds,
+                                    n_steps=n_steps)
+    else:
+        trains_b = jnp.broadcast_to(spike_trains,
+                                    (b,) + spike_trains.shape)
+        rfs, _ = train_stream_batch(engine, rfs, trains_b, teach_b,
+                                    ltp_prob=ltp_prob)
+    return rfs.weights.reshape(n, w)

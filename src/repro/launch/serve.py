@@ -32,7 +32,18 @@ def _serve_snn(args) -> None:
     runs the same traffic under a seeded fault storm (launch failures,
     corrupted counts, zero-deadline requests) and proves the robustness
     layer: every request terminates in a terminal status and every
-    SERVED count vector stays bit-exact with the host oracle."""
+    SERVED count vector stays bit-exact with the host oracle.
+
+    ``--refresh-every N`` turns on versioned train-while-serving: a
+    probe-gated STDP refresh every N serving steps, double-buffered
+    weight swaps, and (with ``--state-dir``) checkpointed promotions +
+    rollback.  The oracle check then runs per served *version*, and a
+    version audit exits nonzero if any request was served from a
+    version that was never promoted (``version_violations`` > 0 or a
+    ``served_version`` outside the store's promotion history).  Clean
+    (fault-free) refresh runs additionally require the final probe
+    accuracy to beat the frozen seed bank — the measurable gain
+    train-while-serving exists to deliver."""
     import dataclasses
     import sys
     from collections import Counter
@@ -46,8 +57,9 @@ def _serve_snn(args) -> None:
     from repro.data.digits import make_digits
     from repro.engine import plan_from_config
     from repro.kernels import ops
-    from repro.serving import (FaultInjector, FaultSpec, SNNRequest,
-                               SNNServingEngine, SNNServingPolicy)
+    from repro.serving import (FaultInjector, FaultSpec, SNNRefreshPolicy,
+                               SNNRequest, SNNServingEngine,
+                               SNNServingPolicy, SNNWeightRefresher)
 
     cfg = dataclasses.replace(WENQUXING_22A, n_steps=24,
                               encode=args.encode)
@@ -59,11 +71,36 @@ def _serve_snn(args) -> None:
     inten = np.asarray(quantize_intensities(imgs))
     policy = SNNServingPolicy(max_retries=2, canary_every=2,
                               reprobe_after=4)
+    refresher = None
+    if args.refresh_every > 0:
+        # labeled refresh stream + held-out probe set, disjoint from
+        # the request traffic (different render seeds)
+        ref_imgs, ref_labels = make_digits(
+            max(args.refresh_samples * 4, args.refresh_samples), seed=1)
+        probe_imgs, probe_labels = make_digits(args.probe_size, seed=2)
+        refresher = SNNWeightRefresher(
+            plan, np.asarray(quantize_intensities(ref_imgs)), ref_labels,
+            n_classes=cfg.n_classes,
+            probe_intensities=np.asarray(quantize_intensities(probe_imgs)),
+            probe_labels=probe_labels, neuron_class=neuron_class,
+            n_steps=cfg.n_steps, teach_pos=cfg.teach_pos,
+            teach_neg=cfg.teach_neg,
+            policy=SNNRefreshPolicy(
+                refresh_every=args.refresh_every,
+                probe_size=args.probe_size,
+                refresh_samples=args.refresh_samples))
     injector = None
     if args.inject_faults:
+        refresh_faults = {}
+        if refresher is not None:
+            refresh_faults = dict(p_refresh_corrupt=0.4,
+                                  p_refresh_stall=0.2,
+                                  refresh_stall_ms=1.0,
+                                  p_save_crash=0.3)
         injector = FaultInjector(FaultSpec(
             p_launch_error=0.4, p_corrupt=0.4,
-            error_burst=policy.max_retries + 2, seed=args.fault_seed))
+            error_burst=policy.max_retries + 2, seed=args.fault_seed,
+            **refresh_faults))
     reqs = []
     for i in range(args.requests):
         t_i = cfg.n_steps - 4 * (i % 3)     # ragged window lengths
@@ -73,7 +110,9 @@ def _serve_snn(args) -> None:
         reqs.append(SNNRequest(rid=i, intensities=inten[i],
                                n_steps=t_i, deadline_ms=ddl))
     eng = SNNServingEngine(weights, plan, neuron_class=neuron_class,
-                           policy=policy, on_launch=injector)
+                           policy=policy, on_launch=injector,
+                           refresher=refresher, state_dir=args.state_dir,
+                           keep_versions=64)
     eng.run(reqs)
     print(f"wenquxing-snn: {sum(r.done for r in reqs)}/{len(reqs)} done, "
           f"{eng.windows_served} windows in {eng.batches} batches "
@@ -86,23 +125,46 @@ def _serve_snn(args) -> None:
     served = [r for r in reqs if r.status == "SERVED"]
     mismatches = 0
     for r in served:
+        # the oracle must use the weights of the version that served
+        # the request — frozen serving pins everything to version 0
+        ver = eng.store.get(r.served_version)
+        if ver is None:
+            mismatches += 1     # unattributable response
+            continue
         win = np.asarray(encode_from_counter(
             r.seed, jnp.asarray(r.intensities), r.n_steps))
         win = np.pad(win, ((0, 0), (0, eng.words - win.shape[1])))
         want = np.asarray(ops.infer_window_batch(
-            eng.weights, jnp.asarray(win)[None],
+            ver.weights, jnp.asarray(win)[None],
             threshold=plan.threshold, leak=plan.leak, backend="ref"))[0]
         mismatches += int(not np.array_equal(r.counts, want))
     print(f"oracle-check: {'ok' if mismatches == 0 else 'MISMATCH'} "
           f"({len(served)} served, {mismatches} diverged)")
+    # version audit: every served response attributable to a version
+    # promoted at serve time
+    stats = eng.stats()
+    version_bad = stats["version_violations"] + sum(
+        r.served_version not in eng.store.promoted_order for r in served)
+    gain_bad = 0
+    if refresher is not None:
+        acc_seed = refresher.probe(weights)
+        acc_final = refresher.probe(eng.weights)
+        print(f"refresh-gain: probe_seed={acc_seed:.4f} "
+              f"probe_final={acc_final:.4f} "
+              f"version={stats['weight_version']} "
+              f"promoted={stats['versions_promoted']} "
+              f"rejected={stats['versions_rejected']} "
+              f"rollbacks={stats['rollbacks']} "
+              f"version-audit={'ok' if version_bad == 0 else 'VIOLATION'}")
+        if not args.inject_faults:
+            gain_bad = int(acc_final <= acc_seed)
     if args.bench:
-        stats = eng.stats()
         stats["padded_slot_waste"] = round(stats["padded_slot_waste"], 4)
         if injector is not None:
             stats.update(injector.stats())
         print("serve-bench: " + " ".join(
             f"{k}={v}" for k, v in sorted(stats.items())))
-    if non_terminal or mismatches:
+    if non_terminal or mismatches or version_bad or gain_bad:
         sys.exit(1)
 
 
@@ -142,6 +204,19 @@ def main() -> None:
                          "deadlines) to exercise retry/degradation")
     ap.add_argument("--fault-seed", type=int, default=7,
                     help="FaultInjector seed (storms replay exactly)")
+    ap.add_argument("--refresh-every", type=int, default=0,
+                    help="SNN train-while-serving: run one probe-gated "
+                         "STDP refresh every N serving steps (0 = "
+                         "frozen weights)")
+    ap.add_argument("--probe-size", type=int, default=32,
+                    help="held-out probe samples gating each refresh "
+                         "promotion")
+    ap.add_argument("--refresh-samples", type=int, default=32,
+                    help="labeled samples trained per refresh cycle")
+    ap.add_argument("--state-dir", default=None,
+                    help="persist promoted weight versions here "
+                         "(atomic checkpoints; restart restores the "
+                         "newest complete version)")
     args = ap.parse_args()
 
     if args.arch == "wenquxing-snn":

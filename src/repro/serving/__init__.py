@@ -3,8 +3,10 @@
 Transformer path: continuous-batching :class:`ServingEngine` over KV
 cache slots.  SNN path: :class:`SNNServingEngine`, dynamic window
 batching over the unified SNN engine with a fault-tolerant request
-lifecycle (:class:`SNNServingPolicy`) and a deterministic fault
-injection harness (:mod:`repro.serving.faults`).
+lifecycle (:class:`SNNServingPolicy`), versioned train-while-serving
+weights (:mod:`repro.serving.weights` — double-buffered swap,
+probe-gated promotion, checkpointed rollback) and a deterministic
+fault injection harness (:mod:`repro.serving.faults`).
 """
 
 from repro.serving.engine import Request, ServingEngine
@@ -12,10 +14,15 @@ from repro.serving.faults import FaultInjectedError, FaultInjector, FaultSpec
 from repro.serving.snn import (SNNRequest, SNNServingEngine,
                                SNNServingPolicy, TERMINAL_STATUSES,
                                degradation_ladder)
+from repro.serving.weights import (SNNRefreshPolicy, SNNWeightRefresher,
+                                   VersionedWeightStore, WeightVersion,
+                                   weight_fingerprint)
 
 __all__ = [
     "Request", "ServingEngine",
     "SNNRequest", "SNNServingEngine", "SNNServingPolicy",
     "TERMINAL_STATUSES", "degradation_ladder",
     "FaultInjectedError", "FaultInjector", "FaultSpec",
+    "SNNRefreshPolicy", "SNNWeightRefresher", "VersionedWeightStore",
+    "WeightVersion", "weight_fingerprint",
 ]

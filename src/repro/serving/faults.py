@@ -22,6 +22,25 @@ seeded ``numpy`` generator, so storms replay bit-identically — may
 
 The engine never hooks its ``kind="fallback"`` oracle re-serves, so an
 injector can never corrupt the path that repairs its own damage.
+
+Versioned train-while-serving adds two hooked call kinds with their own
+fault families (drawn from the same generator, but only when those
+calls happen — a storm with no refresher replays bit-identically with
+older injectors):
+
+* ``kind="refresh"`` — consulted once per refresh cycle, before the
+  candidate is trained.  May stall (``p_refresh_stall`` ×
+  ``refresh_stall_ms`` — trips the refresher's stalled-refresh
+  timeout) or return a *weight*-corruption callable
+  (``p_refresh_corrupt``) the engine applies to the candidate bank
+  after its content fingerprint was taken — exactly a torn/corrupted
+  candidate, which the store's fingerprint verification at the probe
+  gate is specified to catch deterministically.
+* ``kind="save"`` — consulted by the store right before persisting a
+  promoted version.  With ``p_save_crash`` it raises, modeling a
+  process crash mid-checkpoint: the store leaves a torn ``step_N.tmp``
+  dropping and aborts the promotion, exactly what a restarted process
+  would find on disk.
 """
 
 from __future__ import annotations
@@ -45,9 +64,16 @@ class FaultSpec:
     stall_ms: float = 0.0         # stall duration when one fires
     error_burst: int = 1          # consecutive failures per error trigger
     seed: int = 0                 # numpy generator seed (replayable)
+    # --- refresh-path faults (kind="refresh" / kind="save" calls) -------
+    p_refresh_corrupt: float = 0.0  # P[candidate weights corrupted]
+    p_refresh_stall: float = 0.0    # P[refresh stalls before training]
+    refresh_stall_ms: float = 0.0   # refresh stall duration
+    p_save_crash: float = 0.0       # P[crash mid-checkpoint-save]
 
     def __post_init__(self):
-        for name in ("p_launch_error", "p_corrupt", "p_stall"):
+        for name in ("p_launch_error", "p_corrupt", "p_stall",
+                     "p_refresh_corrupt", "p_refresh_stall",
+                     "p_save_crash"):
             p = getattr(self, name)
             if not 0.0 <= p <= 1.0:
                 raise ValueError(f"{name} must be in [0, 1], got {p}")
@@ -56,6 +82,9 @@ class FaultSpec:
                              f"{self.error_burst}")
         if self.stall_ms < 0:
             raise ValueError(f"stall_ms must be >= 0, got {self.stall_ms}")
+        if self.refresh_stall_ms < 0:
+            raise ValueError(f"refresh_stall_ms must be >= 0, got "
+                             f"{self.refresh_stall_ms}")
 
 
 class FaultInjector:
@@ -75,11 +104,37 @@ class FaultInjector:
         self.errors = 0
         self.corruptions = 0
         self.stalls = 0
+        self.refresh_corruptions = 0
+        self.refresh_stalls = 0
+        self.save_crashes = 0
         self._burst_left = 0
 
     def __call__(self, ctx: dict):
         self.launches += 1
         sp = self.spec
+        kind = ctx.get("kind", "serve")
+        if kind == "refresh":
+            draw = self.rng.random(2)
+            if draw[0] < sp.p_refresh_stall and sp.refresh_stall_ms > 0:
+                self.refresh_stalls += 1
+                time.sleep(sp.refresh_stall_ms / 1e3)
+            if draw[1] < sp.p_refresh_corrupt:
+                self.refresh_corruptions += 1
+
+                def corrupt_weights(w):
+                    out = np.array(w)        # torn-buffer bit rot
+                    out ^= np.uint32(0xA5A5A5A5)
+                    return out
+
+                return corrupt_weights
+            return None
+        if kind == "save":
+            if self.rng.random() < sp.p_save_crash:
+                self.save_crashes += 1
+                raise FaultInjectedError(
+                    f"injected crash during checkpoint save "
+                    f"(version={ctx.get('version')})")
+            return None
         draw = self.rng.random(3)
         if self._burst_left > 0 or draw[0] < sp.p_launch_error:
             if self._burst_left == 0:
@@ -114,4 +169,7 @@ class FaultInjector:
         return {"fault_launches": self.launches,
                 "fault_errors": self.errors,
                 "fault_corruptions": self.corruptions,
-                "fault_stalls": self.stalls}
+                "fault_stalls": self.stalls,
+                "fault_refresh_corruptions": self.refresh_corruptions,
+                "fault_refresh_stalls": self.refresh_stalls,
+                "fault_save_crashes": self.save_crashes}

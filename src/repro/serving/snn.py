@@ -67,10 +67,46 @@ known-answer canary (every ``policy.canary_every`` steps) re-serves a
 fixed window through the *current* rung and compares against golden
 ref-path counts, catching in-range corruption the guard cannot.
 
+**Version lifecycle (train-while-serving).**  With a
+:class:`repro.serving.weights.SNNWeightRefresher` attached, weights
+live in a :class:`repro.serving.weights.VersionedWeightStore` and move
+through ``candidate -> probed -> promoted -> (rolled-back)``:
+
+* **candidate** — every ``refresh_every`` serving steps the refresher
+  trains a new bank from the serving weights (STDP over the next
+  refresh-stream slice, epoch-keyed counter seeds) and *stages* it
+  under a fresh monotonic version number.  Staged versions are never
+  visible to traffic.
+* **probed** — the candidate must first re-verify the content
+  fingerprint taken at production time (a corrupted or torn candidate
+  is rejected deterministically, before any accuracy math), then beat
+  the serving bank on the fixed held-out probe set within the policy's
+  ``max_regression``.  Rejections only increment counters.
+* **promoted** — a passing candidate is persisted through the atomic
+  :class:`repro.checkpoint.CheckpointManager` (tmp-dir + rename; a
+  crash mid-save leaves a ``.tmp`` dropping and aborts the promotion)
+  and *queued* for swap.  The swap itself happens only between serving
+  steps: each ``step()`` pins the serving version before forming its
+  batch, so in-flight windows always finish on the bank they launched
+  with — a half-written or mid-swap bank is unobservable by
+  construction.  Every ``SERVED`` request records ``served_version``.
+* **rolled-back** — if the probe later shows the *serving* bank
+  regressed, or the known-answer canary fails right after a refresh
+  promotion, the store demotes it and re-reads the previous promoted
+  version from disk (bit-exact with its checkpoint).  Demoted versions
+  are never served again; a process restart restores the newest
+  *complete* on-disk version instead of the seed weights.
+
 **Observability.**  ``stats()`` reports rejected / expired / failed /
 retried / degraded / integrity-failure / canary counters plus
 per-request queue-wait and service latency p50/p99 — surfaced by
-``repro.launch.serve --arch wenquxing-snn --bench``.
+``repro.launch.serve --arch wenquxing-snn --bench``.  Versioned
+serving adds the store counters (weight_version, versions promoted /
+rejected, rollbacks, save_crashes) and refresh-path counters
+(refresh_runs / refresh_rejected / refresh_corrupt / refresh_timeouts
+/ refresh_failed, probe_accuracy, version_violations — the latter must
+stay 0: every served response is attributable to a version that was
+promoted and live at serve time).
 """
 
 from __future__ import annotations
@@ -85,6 +121,7 @@ import numpy as np
 from repro.core.encoder import encode_from_counter
 from repro.engine import SNNEngine, SNNEnginePlan
 from repro.kernels import ops
+from repro.serving.weights import SNNWeightRefresher, VersionedWeightStore
 
 _T_QUANTUM = 8   # window lengths bucket to multiples of this (or t_chunk)
 
@@ -124,6 +161,7 @@ class SNNRequest:
     queue_wait_ms: float | None = None  # submit -> batch formation
     service_ms: float | None = None     # submit -> terminal
     t_submit_ms: float | None = None    # perf_counter stamp at admission
+    served_version: int | None = None   # weight version the counts came from
 
     @property
     def terminal(self) -> bool:
@@ -192,21 +230,35 @@ class SNNServingEngine:
     given, is consulted before every serve/canary launch (the fault
     injection hook — :mod:`repro.serving.faults`); the production path
     is untouched when it is None.
+
+    ``refresher`` (optional) turns on train-while-serving: every
+    ``refresher.policy.refresh_every`` steps the engine runs one
+    probe-gated refresh cycle between batches (see the module
+    docstring's version-lifecycle section).  ``state_dir`` (optional,
+    independent of the refresher) persists promoted versions through
+    the atomic checkpoint manager; constructing an engine over an
+    existing ``state_dir`` restores the newest complete version
+    instead of ``weights``.
     """
 
     def __init__(self, weights, plan: SNNEnginePlan, *,
                  neuron_class=None, policy: SNNServingPolicy | None = None,
-                 on_launch: Callable[[dict], object] | None = None):
+                 on_launch: Callable[[dict], object] | None = None,
+                 refresher: SNNWeightRefresher | None = None,
+                 state_dir=None, keep_versions: int = 4):
         if plan.threshold < 1:
             raise ValueError("SNN serving requires threshold >= 1 "
                              "(zero-padded cycles must stay silent)")
         self.plan = plan
         self.policy = policy if policy is not None else SNNServingPolicy()
         self.on_launch = on_launch
+        self.refresher = refresher
         self._plans = degradation_ladder(plan)
         self._engines: dict[int, SNNEngine] = {0: SNNEngine(plan)}
         self.engine = self._engines[0]
-        self.weights = jnp.asarray(weights, jnp.uint32)
+        self._store = VersionedWeightStore(weights, state_dir=state_dir,
+                                           keep=keep_versions)
+        self._pinned = self._store.serving
         self.words = int(self.weights.shape[1])
         self.n_inputs = self.words * 32
         if neuron_class is None:
@@ -246,6 +298,26 @@ class SNNServingEngine:
         self._last_error: str | None = None
         self._canary_window: np.ndarray | None = None
         self._canary_golden: np.ndarray | None = None
+        self._canary_version: int | None = None
+        # --- versioned-refresh counters --------------------------------
+        self.refresh_runs = 0
+        self.refresh_rejected = 0     # probe-gate accuracy rejections
+        self.refresh_corrupt = 0      # fingerprint-mismatch rejections
+        self.refresh_timeouts = 0     # stalled refreshes aborted
+        self.refresh_failed = 0       # candidate production / probe died
+        self.version_violations = 0   # served from a non-live version
+        self.last_probe_accuracy: float | None = None
+        self.refresh_events: list[dict] = []
+        self._last_refresh_step = 0
+
+    @property
+    def weights(self):
+        """The serving weight bank (the store's promoted version)."""
+        return self._store.serving.weights
+
+    @property
+    def store(self) -> VersionedWeightStore:
+        return self._store
 
     # --- admission -----------------------------------------------------
 
@@ -356,7 +428,7 @@ class SNNServingEngine:
             seeds[i] = r.seed
             t_total[i] = r.n_steps
         return np.asarray(eng.infer(
-            self.weights, intensities=jnp.asarray(inten),
+            self._pinned.weights, intensities=jnp.asarray(inten),
             seeds=jnp.asarray(seeds), n_steps=t_pad,
             t_total=jnp.asarray(t_total)))
 
@@ -374,7 +446,7 @@ class SNNServingEngine:
                     r.seed, jnp.asarray(r.intensities), r.n_steps))
             stacked[i, :win.shape[0], :win.shape[1]] = win
         return np.asarray(
-            eng.infer(self.weights, jnp.asarray(stacked)))
+            eng.infer(self._pinned.weights, jnp.asarray(stacked)))
 
     def _launch_counts(self, batch, t_pad: int, level: int, *,
                        hooked: bool = True, attempt: int = 0,
@@ -476,18 +548,25 @@ class SNNServingEngine:
     def _canary_check(self) -> None:
         """Known-answer probe: serve a fixed window through the current
         rung (hook included) and compare with golden ref-path counts —
-        catches in-range corruption the range guard cannot."""
+        catches in-range corruption the range guard cannot.  Golden
+        counts are a function of the weights, so they are re-derived
+        whenever the pinned version changes; a mismatch while serving a
+        freshly *refreshed* version is treated as post-promotion
+        regression and rolls the store back (path corruption on a
+        seed/rollback bank only degrades, as before)."""
         plan = self.plan
+        pinned = self._pinned
         if self._canary_window is None:
             inten = jnp.full((self.n_inputs,), 128, jnp.uint8)
-            win = np.asarray(encode_from_counter(
+            self._canary_window = np.asarray(encode_from_counter(
                 _CANARY_SEED, inten, self.policy.canary_steps),
                 dtype=np.uint32)
-            self._canary_window = win
+        if self._canary_version != pinned.version:
             self._canary_golden = np.asarray(ops.infer_window_batch(
-                self.weights, jnp.asarray(win)[None],
+                pinned.weights, jnp.asarray(self._canary_window)[None],
                 threshold=plan.threshold, leak=plan.leak,
                 backend="ref"))[0]
+            self._canary_version = pinned.version
         req = SNNRequest(rid=-1, window=self._canary_window)
         q = self._t_quantum()
         t_pad = -(-self.policy.canary_steps // q) * q
@@ -505,12 +584,133 @@ class SNNServingEngine:
             if (self.policy.degrade_on_integrity
                     and self.level < len(self._plans) - 1):
                 self._degrade("canary mismatch vs golden counts")
+            if pinned.origin == "refresh" and self._store.can_rollback():
+                tgt = self._store.rollback(
+                    reason=f"canary mismatch on refreshed version "
+                           f"{pinned.version}")
+                self.refresh_events.append({
+                    "event": "rollback", "step": self.steps,
+                    "from": pinned.version, "to": tgt.version,
+                    "reason": "canary mismatch"})
+
+    # --- versioned refresh ----------------------------------------------
+
+    def _refresh_event(self, event: str, **fields) -> None:
+        self.refresh_events.append({"event": event, "step": self.steps,
+                                    **fields})
+
+    def _maybe_refresh(self) -> None:
+        rf = self.refresher
+        if rf is None or rf.policy.refresh_every <= 0 or self.steps == 0:
+            return
+        if self.steps - self._last_refresh_step < rf.policy.refresh_every:
+            return
+        self._last_refresh_step = self.steps
+        self._refresh_cycle()
+
+    def _refresh_cycle(self) -> None:
+        """One probe-gated refresh, run BETWEEN serving steps (the
+        double-buffered swap point).  Train a candidate from the serving
+        bank, verify its content fingerprint, probe it on the held-out
+        set, then promote / reject / roll back.  Never raises; every
+        outcome lands in a counter and ``refresh_events``."""
+        rf = self.refresher
+        pol = rf.policy
+        serving = self._store.serving
+        self.refresh_runs += 1
+        t0 = time.perf_counter()
+        corrupt = None
+        try:
+            if self.on_launch is not None:
+                # refresh-path fault hook: may stall, raise, or return a
+                # weight-corruption callable (applied post-fingerprint,
+                # exactly the torn-candidate failure mode)
+                corrupt = self.on_launch({
+                    "kind": "refresh", "step": self.steps,
+                    "epoch": rf.epochs_run, "level": self.level,
+                    "batch_size": 0, "t_lens": []})
+            cand_w, epoch = rf.next_candidate(serving.weights)
+        except Exception as e:  # noqa: BLE001 — contain refresh faults
+            self._last_error = f"{type(e).__name__}: {e}"
+            self.refresh_failed += 1
+            self._refresh_event("refresh_failed", error=self._last_error)
+            return
+        cand = self._store.stage(cand_w, origin="refresh")
+        if corrupt is not None:
+            cand = dataclasses.replace(cand, weights=jnp.asarray(
+                np.asarray(corrupt(np.asarray(cand.weights))),
+                jnp.uint32))
+        elapsed_ms = (time.perf_counter() - t0) * 1e3
+        if (pol.refresh_timeout_ms is not None
+                and elapsed_ms > pol.refresh_timeout_ms):
+            self.refresh_timeouts += 1
+            self._store.reject(cand, f"stalled refresh: "
+                               f"{elapsed_ms:.1f}ms > "
+                               f"{pol.refresh_timeout_ms}ms")
+            self._refresh_event("refresh_stalled", version=cand.version,
+                                elapsed_ms=round(elapsed_ms, 1))
+            return
+        if not cand.verify():
+            self.refresh_corrupt += 1
+            self._store.reject(cand, "candidate fingerprint mismatch "
+                               "(corrupt weights)")
+            self._refresh_event("refresh_corrupt", version=cand.version)
+            return
+        try:
+            acc_cand = rf.probe(cand.weights)
+            acc_cur = rf.probe(serving.weights)
+        except Exception as e:  # noqa: BLE001 — probe died
+            self._last_error = f"{type(e).__name__}: {e}"
+            self.refresh_failed += 1
+            self._store.reject(cand, f"probe failed: {self._last_error}")
+            self._refresh_event("refresh_failed", version=cand.version,
+                                error=self._last_error)
+            return
+        self.last_probe_accuracy = acc_cur
+        if (serving.probe_accuracy is not None
+                and acc_cur < serving.probe_accuracy - pol.max_regression
+                and self._store.can_rollback()):
+            # the SERVING bank itself regressed vs its promotion-time
+            # probe — post-promotion rollback, candidate dropped too
+            self._store.reject(cand, "serving bank regressed; "
+                               "rolling back first")
+            tgt = self._store.rollback(
+                reason=f"probe regression: {acc_cur:.3f} < promoted "
+                       f"{serving.probe_accuracy:.3f}")
+            self._refresh_event("rollback", **{
+                "from": serving.version, "to": tgt.version,
+                "probe_accuracy": acc_cur})
+            return
+        if acc_cand < acc_cur - pol.max_regression:
+            self.refresh_rejected += 1
+            self._store.reject(cand, f"probe gate: candidate "
+                               f"{acc_cand:.3f} < serving "
+                               f"{acc_cur:.3f} - {pol.max_regression}")
+            self._refresh_event("refresh_rejected", version=cand.version,
+                                candidate=acc_cand, serving=acc_cur)
+            return
+        cand = dataclasses.replace(cand, probe_accuracy=acc_cand)
+        if self._store.promote(cand, on_save=self.on_launch):
+            self.last_probe_accuracy = acc_cand
+            self._refresh_event("promoted", version=cand.version,
+                                probe_accuracy=acc_cand, epoch=epoch)
+        else:
+            self._refresh_event("save_crash", version=cand.version)
 
     def step(self) -> int:
         """Admit + serve one batch.  Returns the number of requests
         reaching a terminal status this step; never raises — launch
-        faults retry, degrade, and at worst end the batch ``FAILED``."""
+        faults retry, degrade, and at worst end the batch ``FAILED``.
+
+        Step top is the version boundary: run a due refresh cycle,
+        apply any queued promotion/rollback swap, then *pin* the
+        serving version — every launch this step (serve, retry, oracle
+        re-serve, canary) reads the pinned bank, so a swap can never
+        tear a batch."""
         pol = self.policy
+        self._maybe_refresh()
+        self._store.swap_if_pending()
+        self._pinned = self._store.serving
         batch, finished = self._form_batch()
         if not batch:
             return finished
@@ -533,6 +733,9 @@ class SNNServingEngine:
                              f"{self._last_error}")
                 continue
             r.counts = counts[i]
+            r.served_version = self._pinned.version
+            if not self._store.is_live(self._pinned.version):
+                self.version_violations += 1
             if self.neuron_class is not None:
                 r.pred = int(self.neuron_class[int(np.argmax(counts[i]))])
             self.queue_wait_ms.append(r.queue_wait_ms)
@@ -612,6 +815,16 @@ class SNNServingEngine:
             "canary_checks": self.canary_checks,
             "canary_failures": self.canary_failures,
             "level": self.level,
+            # --- versioned refresh -----------------------------------
+            **self._store.stats(),
+            "refresh_runs": self.refresh_runs,
+            "refresh_rejected": self.refresh_rejected,
+            "refresh_corrupt": self.refresh_corrupt,
+            "refresh_timeouts": self.refresh_timeouts,
+            "refresh_failed": self.refresh_failed,
+            "version_violations": self.version_violations,
+            "probe_accuracy": (None if self.last_probe_accuracy is None
+                               else round(self.last_probe_accuracy, 4)),
             "queue_wait_ms_p50": self._pctl(self.queue_wait_ms, 50),
             "queue_wait_ms_p99": self._pctl(self.queue_wait_ms, 99),
             "service_ms_p50": self._pctl(self.service_ms, 50),

@@ -1,0 +1,110 @@
+"""Crash-mid-write recovery for SNN regfile pytrees.
+
+The atomic tmp-dir + rename protocol means a writer dying at ANY point
+before the rename leaves only a ``step_N.tmp/`` dropping; restore must
+ignore it and pick the newest *complete* step, and ``purge_tmp`` must
+clear the droppings.  Exercised with the NamedTuple SnnRegFile pytree
+the versioned serving path actually persists (uint32/int32 leaves),
+not just dict-of-float trees.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.rvsnn import SnnRegFile, snn_regfile
+
+
+def _regfile(seed=0x22A, n=6, w=3):
+    rng = np.random.default_rng(seed)
+    weights = jnp.asarray(rng.integers(0, 2**32, (n, w),
+                                       dtype=np.uint32))
+    return snn_regfile(weights, seed=seed)
+
+
+def _assert_regfile_equal(a: SnnRegFile, b: SnnRegFile):
+    for name in SnnRegFile._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=f"leaf {name} diverged")
+
+
+def test_regfile_roundtrip_preserves_dtypes(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=False)
+    rf = _regfile()
+    mgr.save(1, rf)
+    got, step = mgr.restore(None, rf)
+    assert step == 1
+    _assert_regfile_equal(got, rf)
+    assert np.asarray(got.weights).dtype == np.uint32
+    assert np.asarray(got.v).dtype == np.int32
+
+
+def _torn_save(directory, step, rf, *, with_manifest=False):
+    """Reproduce a writer crash: partial leaf files in ``step_N.tmp``,
+    the rename never happened."""
+    tmp = directory / f"step_{step}.tmp"
+    tmp.mkdir()
+    (tmp / "weights.proc0.npy").write_bytes(
+        np.asarray(rf.weights).tobytes()[:7])   # truncated mid-leaf
+    if with_manifest:
+        (tmp / "manifest.json").write_text(json.dumps({"step": step}))
+
+
+def test_crash_mid_write_restores_newest_complete(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=4, async_save=False)
+    rf_old, rf_new = _regfile(1), _regfile(2)
+    mgr.save(1, rf_old)
+    mgr.save(2, rf_new)
+    # a later save died mid-write: torn tmp only, never renamed
+    _torn_save(tmp_path, 3, _regfile(3))
+    assert mgr.all_steps() == [1, 2]            # tmp never listed
+    got, step = mgr.restore(None, rf_new)
+    assert step == 2
+    _assert_regfile_equal(got, rf_new)
+
+
+def test_torn_tmp_with_manifest_still_ignored(tmp_path):
+    """Even a tmp dir that got as far as writing manifest.json is not a
+    checkpoint — only the atomic rename publishes a step."""
+    mgr = CheckpointManager(tmp_path, keep=4, async_save=False)
+    rf = _regfile(1)
+    mgr.save(7, rf)
+    _torn_save(tmp_path, 9, _regfile(9), with_manifest=True)
+    assert mgr.all_steps() == [7]
+    got, step = mgr.restore(None, rf)
+    assert step == 7
+    _assert_regfile_equal(got, rf)
+
+
+def test_purge_tmp_clears_droppings_and_keeps_steps(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=4, async_save=False)
+    rf = _regfile(1)
+    mgr.save(1, rf)
+    _torn_save(tmp_path, 2, _regfile(2))
+    _torn_save(tmp_path, 5, _regfile(5))
+    purged = mgr.purge_tmp()
+    assert sorted(purged) == ["step_2.tmp", "step_5.tmp"]
+    assert not list(tmp_path.glob("*.tmp"))
+    assert mgr.all_steps() == [1]
+    _assert_regfile_equal(mgr.restore(None, rf)[0], rf)
+    assert mgr.purge_tmp() == []                # idempotent
+
+
+def test_interrupted_rewrite_of_same_step(tmp_path):
+    """A crash while REWRITING an existing step must not damage the
+    published copy: the torn tmp sits next to the complete step dir."""
+    mgr = CheckpointManager(tmp_path, keep=4, async_save=False)
+    rf = _regfile(4)
+    mgr.save(4, rf)
+    _torn_save(tmp_path, 4, _regfile(40))
+    got, step = mgr.restore(None, rf)
+    assert step == 4
+    _assert_regfile_equal(got, rf)
+    mgr.purge_tmp()
+    # and a fresh save of the same step still goes through cleanly
+    rf2 = _regfile(41)
+    mgr.save(4, rf2)
+    _assert_regfile_equal(mgr.restore(4, rf2)[0], rf2)

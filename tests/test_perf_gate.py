@@ -7,9 +7,10 @@ REPO = Path(__file__).resolve().parents[1]
 if str(REPO) not in sys.path:
     sys.path.insert(0, str(REPO))
 
-from benchmarks.run import (GATE_THRESHOLD, GATE_TIME_BASE_MIN,  # noqa: E402
-                            GATE_TIME_FLOOR, check_regressions,
-                            load_baseline)
+from benchmarks.run import (GATE_LATENCY_FLOOR_MS,  # noqa: E402
+                            GATE_LATENCY_RATIO, GATE_THRESHOLD,
+                            GATE_TIME_BASE_MIN, GATE_TIME_FLOOR,
+                            check_regressions, load_baseline)
 
 
 def test_detects_lost_structural_speedup():
@@ -53,6 +54,54 @@ def test_new_removed_and_ratio_free_rows_ignored():
     base = {"gone": {"time_ratio": 9.0}, "interp": {"us_per_call": 3.0}}
     rows = {"new": {"time_ratio": 9.0}, "interp": {"us_per_call": 9.0}}
     assert check_regressions(base, rows) == []
+
+
+def test_latency_gates_on_increase():
+    """Serving latency percentiles gate the INCREASE direction: a
+    percentile past ratio x baseline AND above the absolute floor
+    fails (a serving step that started recompiling/blocking)."""
+    base = {"serve/latency-a": {"service_ms_p99": 2.0,
+                               "queue_wait_ms_p50": 1.0}}
+    bad = 2.0 * GATE_LATENCY_RATIO + GATE_LATENCY_FLOOR_MS
+    rows = {"serve/latency-a": {"service_ms_p99": bad,
+                               "queue_wait_ms_p50": 1.0}}
+    msgs = check_regressions(base, rows)
+    assert len(msgs) == 1 and "service_ms_p99" in msgs[0]
+
+
+def test_latency_noise_below_floor_never_gates():
+    """A huge relative jump that stays under the absolute floor is
+    host-speed noise on a sub-ms path, not a regression."""
+    base = {"serve/latency-a": {"service_ms_p99": 0.5}}
+    rows = {"serve/latency-a": {
+        "service_ms_p99": GATE_LATENCY_FLOOR_MS - 1.0}}
+    assert check_regressions(base, rows) == []
+
+
+def test_latency_slow_but_proportional_never_gates():
+    """Above the floor but within ratio x baseline passes — a uniformly
+    slower CI host shifts every percentile without tripping the gate."""
+    base = {"serve/latency-a": {"service_ms_p99": 20.0}}
+    rows = {"serve/latency-a": {
+        "service_ms_p99": 20.0 * (GATE_LATENCY_RATIO - 1.0)}}
+    assert check_regressions(base, rows) == []
+
+
+def test_latency_decrease_never_gates():
+    base = {"serve/latency-a": {"service_ms_p99": 200.0}}
+    rows = {"serve/latency-a": {"service_ms_p99": 1.0}}
+    assert check_regressions(base, rows) == []
+
+
+def test_committed_baseline_has_latency_rows():
+    """The serve/latency-* percentiles are committed so the increase
+    gate has a baseline to compare against."""
+    baseline = load_baseline(str(REPO / "BENCH_kernels.json"))
+    lat = [row for name, row in baseline.items()
+           if name.startswith("serve/latency-")]
+    assert lat and all(
+        k in lat[0] for k in ("queue_wait_ms_p50", "queue_wait_ms_p99",
+                              "service_ms_p50", "service_ms_p99"))
 
 
 def test_committed_baseline_loads_and_has_gated_rows():

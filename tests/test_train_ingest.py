@@ -16,8 +16,9 @@ import numpy as np
 import pytest
 
 import repro.core.trainer as trainer_mod
+from repro.core import lfsr
 from repro.core.encoder import (encode_windows_host, quantize_intensities,
-                                sample_seeds)
+                                sample_seeds, sample_seeds_at)
 from repro.core.rvsnn import snn_regfile, snn_regfile_batch
 from repro.core.trainer import SNNTrainConfig, accuracy, classify, train
 from repro.data.digits import make_digits
@@ -47,6 +48,65 @@ def test_sample_seeds_contract():
     # decorrelated, not consecutive integers; distinct per base seed
     assert len(set(np.asarray(s).tolist())) == 16
     assert (np.asarray(sample_seeds(8, 16)) != np.asarray(s)).any()
+
+
+def test_sample_seeds_epoch_zero_is_bit_exact_with_legacy():
+    """epoch defaults to 0 and reproduces the historical single-epoch
+    derivation exactly — callers that never pass epoch see no change."""
+    legacy = lfsr.counter_hash(jnp.uint32(7),
+                               jnp.arange(16, dtype=jnp.uint32),
+                               jnp.uint32(0)).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(sample_seeds(7, 16)),
+                                  np.asarray(legacy))
+    np.testing.assert_array_equal(np.asarray(sample_seeds(7, 16, 0)),
+                                  np.asarray(legacy))
+
+
+def test_sample_seeds_epochs_decorrelate():
+    """Distinct epochs draw distinct seeds for every sample (fresh
+    Poisson windows per epoch), and the derivation is stateless in
+    (base, epoch, index)."""
+    e0 = np.asarray(sample_seeds(7, 32, 0))
+    e1 = np.asarray(sample_seeds(7, 32, 1))
+    e2 = np.asarray(sample_seeds(7, 32, 2))
+    assert (e0 != e1).all() and (e1 != e2).all() and (e0 != e2).all()
+    np.testing.assert_array_equal(np.asarray(sample_seeds(7, 32, 1)), e1)
+
+
+def test_sample_seeds_at_indexes_the_full_range():
+    """sample_seeds_at(base, idx, e) == sample_seeds(base, n, e)[idx] —
+    error-subset re-presentations keep each sample's original
+    derivation without materializing the range."""
+    idx = jnp.asarray([3, 0, 11, 11, 7], jnp.int32)
+    for epoch in (0, 1, 5):
+        full = np.asarray(sample_seeds(0x22A, 12, epoch))
+        at = np.asarray(sample_seeds_at(0x22A, idx, epoch))
+        np.testing.assert_array_equal(at, full[np.asarray(idx)])
+
+
+def test_multi_epoch_kernel_training_uses_fresh_draws():
+    """A second epoch must not just re-run epoch 0's windows: with
+    epoch-keyed seeds, (epoch 0, epoch 1) ends in different weights
+    than presenting epoch 0's windows twice — and the epoch-1 pass is
+    itself deterministic."""
+    weights, inten, teach, _ = _stream_operands()
+    eng = SNNEngine(SNNEnginePlan(encode="kernel", **KW))
+    e0 = sample_seeds(0x22A, 4, 0)
+    e1 = sample_seeds(0x22A, 4, 1)
+
+    def two_passes(second_seeds):
+        rf = snn_regfile(weights, seed=0xACE1)
+        for s in (e0, second_seeds):
+            rf, _ = train_stream(eng, rf, teach=teach,
+                                 intensities=inten, seeds=s,
+                                 n_steps=T)
+        return np.asarray(rf.weights)
+
+    repeated = two_passes(e0)
+    fresh = two_passes(e1)
+    fresh2 = two_passes(e1)
+    np.testing.assert_array_equal(fresh, fresh2)
+    assert not np.array_equal(repeated, fresh)
 
 
 def test_kernel_encode_never_materializes_spike_tensor(monkeypatch):
