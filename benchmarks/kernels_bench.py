@@ -418,8 +418,8 @@ def run() -> dict:
 
     s_eng = SNNServingEngine(s_weights, plan_l)
     s_eng.run(_latency_reqs(0))            # warm all T-bucket compiles
-    s_eng.queue_wait_ms.clear()
-    s_eng.service_ms.clear()
+    s_eng.queue_wait_hist.reset()
+    s_eng.service_hist.reset()
     s_eng.run(_latency_reqs(n_req))        # measured steady-state pass
     s_st = s_eng.stats()
     lat_keys = ("queue_wait_ms_p50", "queue_wait_ms_p99",

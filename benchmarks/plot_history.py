@@ -3,9 +3,13 @@
 ``run.py --json --history`` archives one immutable
 ``bench_history/<sha>.json`` per commit; this module turns that
 directory into a small-multiples SVG — one sparkline panel per
-benchmark row, ``us_per_call`` panels in one section and the
-structural ``bytes_ratio`` panels in another — so the perf trajectory
-across PRs is readable at a glance instead of by diffing JSON.  CI
+benchmark row, ``us_per_call`` panels in one section, the
+structural ``bytes_ratio`` panels in another, and (when ``loadgen/*``
+rows are present) throughput-vs-latency sections for the open-loop
+load harness: sustainable/achieved requests-per-second, SLO
+attainment, and coordinated-omission-correct end-to-end p99 — so the
+perf trajectory across PRs is readable at a glance instead of by
+diffing JSON.  CI
 writes the SVG next to the history artifacts and uploads the
 directory.
 
@@ -30,9 +34,11 @@ import sys
 from html import escape
 
 # Single-series panels: one accent per metric section (categorical
-# slots 1/2 of the validated default palette), neutral ink for text.
+# slots of the validated default palette), neutral ink for text.
 _C_TIME = "#2a78d6"
 _C_RATIO = "#eb6834"
+_C_RPS = "#13866f"
+_C_SLO = "#7856c1"
 _INK = "#0b0b0b"
 _INK_MUTED = "#52514e"
 _GRID = "#e4e3e0"
@@ -161,6 +167,16 @@ def _section(parts: list[str], series: dict[str, list], y: float,
 def render_svg(history: list[tuple[str, dict]]) -> str:
     times = _series(history, "us_per_call")
     ratios = _series(history, "bytes_ratio")
+    # loadgen throughput-vs-latency: achieved + bisected-sustainable
+    # rates in one section, SLO attainment and open-loop e2e p99 in
+    # their own (only loadgen rows carry these metrics)
+    rps = _series(history, "achieved_rps")
+    rps.update({f"{n} (max sustainable)": vals for n, vals in
+                _series(history, "sustainable_rps").items()})
+    slo = _series(history, "slo_attainment")
+    e2e = {n: vals for n, vals in
+           _series(history, "e2e_ms_p99").items()
+           if n.startswith("loadgen/")}
     width = _PAD + _COLS * (_PANEL_W + _PAD)
     parts: list[str] = []
     y = float(_PAD)
@@ -174,6 +190,15 @@ def render_svg(history: list[tuple[str, dict]]) -> str:
     y = _section(parts, ratios, y,
                  "bytes_ratio (structural, sequential ÷ fused path)",
                  _C_RATIO, "×")
+    y = _section(parts, rps, y,
+                 "load harness throughput (requests/s, open-loop)",
+                 _C_RPS, "")
+    y = _section(parts, slo, y,
+                 "SLO attainment (fraction of offered requests)",
+                 _C_SLO, "")
+    y = _section(parts, e2e, y,
+                 "open-loop e2e p99 (ms from intended arrival)",
+                 _C_SLO, "ms")
     height = int(y) + _PAD
     head = (
         f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '

@@ -8,10 +8,13 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
   fig4_energy       Fig. 4   modeled power, fused vs decoupled
   table2_resources  Table 2  state-footprint analogue of LUT/FF/BRAM
   kernels_bench     §2.2     fused SNNU vs unfused chain, window vs steps
+  loadgen_bench     serving  open-loop throughput vs latency, rate sweep
 
 Usage::
 
-  python benchmarks/run.py [module] [--json[=PATH]] [--gate]
+  python benchmarks/run.py [module ...] [--json[=PATH]] [--gate]
+
+Any number of module names filters the run (none = all modules).
 
 ``--json`` additionally writes every emitted row as machine-readable
 JSON (name -> us_per_call + parsed derived metrics such as bytes_ratio
@@ -39,7 +42,12 @@ baseline row (>= ``GATE_TIME_BASE_MIN``) collapses below
 latency percentiles (the ``serve/latency-*`` rows' ``*_ms_p50`` /
 ``*_ms_p99`` metrics) gate the increase direction instead: they fail
 only past ``GATE_LATENCY_RATIO`` x baseline above an absolute
-``GATE_LATENCY_FLOOR_MS``.  ``--gate``
+``GATE_LATENCY_FLOOR_MS``.  The ``loadgen/*`` rows add two more rules:
+``slo_attainment`` (a fraction in [0, 1]) fails on an *absolute* drop
+of more than ``GATE_SLO_DROP``, and ``sustainable_rps`` (the bisected
+max sustainable offered rate, deterministic on the virtual clock)
+fails like the structural ratios when it collapses by more than
+``GATE_THRESHOLD``.  ``--gate``
 without ``--json``, or without a loadable committed baseline, is a
 configuration error (exit 2), never a silent pass.  Without ``--gate``,
 regressions are printed as warnings only.
@@ -65,7 +73,14 @@ _GATED_METRICS = ("time_ratio", "bytes_ratio")
 # in the serving step) lands orders of magnitude past both.
 GATE_LATENCY_RATIO = 8.0
 GATE_LATENCY_FLOOR_MS = 10.0
-_GATED_LATENCY_SUFFIXES = ("_ms_p50", "_ms_p99")
+_GATED_LATENCY_SUFFIXES = ("_ms_p50", "_ms_p99", "_ms_p999")
+
+# loadgen rows: SLO attainment is a fraction of offered requests, so it
+# gates on an absolute drop (0.98 -> 0.90 is a real regression even
+# though the relative change is small); sustainable_rps comes from a
+# deterministic virtual-clock bisection, so the structural-drop
+# threshold applies as-is.
+GATE_SLO_DROP = 0.05
 
 
 def archive_history(rows: dict, history_dir: str) -> str:
@@ -114,17 +129,35 @@ def check_regressions(baseline: dict, rows: dict,
     below GATE_TIME_FLOOR — i.e. the batched/fused path degraded to
     ~sequential speed, not merely a noisy-but-still-fast run.
 
-    Serving-latency percentiles (``*_ms_p50``/``*_ms_p99`` metrics on
-    the ``serve/latency-*`` rows) gate the opposite direction: bigger
-    is worse.  They fail only when the new value exceeds BOTH
-    ``GATE_LATENCY_RATIO`` x the baseline and the absolute
-    ``GATE_LATENCY_FLOOR_MS`` — so host-speed noise on a ~1-2 ms
-    percentile never gates, but a serving step that started
-    recompiling or blocking does.
+    Serving-latency percentiles (``*_ms_p50``/``*_ms_p99``/
+    ``*_ms_p999`` metrics on the ``serve/latency-*`` and ``loadgen/*``
+    rows) gate the opposite direction: bigger is worse.  They fail
+    only when the new value exceeds BOTH ``GATE_LATENCY_RATIO`` x the
+    baseline and the absolute ``GATE_LATENCY_FLOOR_MS`` — so
+    host-speed noise on a ~1-2 ms percentile never gates, but a
+    serving step that started recompiling or blocking does.
+
+    ``slo_attainment`` fails on an absolute drop past ``GATE_SLO_DROP``
+    and ``sustainable_rps`` on a relative collapse past ``threshold``;
+    both are deterministic on the virtual clock, so neither needs a
+    noise allowance beyond the thresholds themselves.
     """
     msgs = []
     for name in sorted(set(baseline) & set(rows)):
         old, new = baseline[name], rows[name]
+        ov, nv = old.get("slo_attainment"), new.get("slo_attainment")
+        if (isinstance(ov, (int, float)) and isinstance(nv, (int, float))
+                and nv < ov - GATE_SLO_DROP):
+            msgs.append(
+                f"{name}: slo_attainment {ov:.4f} -> {nv:.4f} "
+                f"(gate is an absolute -{GATE_SLO_DROP})")
+        ov, nv = old.get("sustainable_rps"), new.get("sustainable_rps")
+        if (isinstance(ov, (int, float)) and isinstance(nv, (int, float))
+                and ov > 0 and nv < ov * (1.0 - threshold)):
+            msgs.append(
+                f"{name}: sustainable_rps {ov:.0f} -> {nv:.0f} "
+                f"({(nv / ov - 1.0) * 100:+.0f}%, gate is "
+                f"-{threshold * 100:.0f}%)")
         for metric in _GATED_METRICS:
             ov, nv = old.get(metric), new.get(metric)
             if not (isinstance(ov, (int, float))
@@ -162,8 +195,9 @@ def check_regressions(baseline: dict, rows: dict,
 
 def main(argv: list[str] | None = None) -> None:
     from benchmarks import (common, fig4_energy, fig5_neurons,
-                            kernels_bench, table1_accuracy,
-                            table2_resources, wexp_sweep)
+                            kernels_bench, loadgen_bench,
+                            table1_accuracy, table2_resources,
+                            wexp_sweep)
 
     args = list(sys.argv[1:] if argv is None else argv)
     json_path = None
@@ -200,11 +234,17 @@ def main(argv: list[str] | None = None) -> None:
             ("wexp_sweep", wexp_sweep),
             ("fig4_energy", fig4_energy),
             ("table2_resources", table2_resources),
-            ("kernels_bench", kernels_bench)]
-    only = args[0] if args else None
+            ("kernels_bench", kernels_bench),
+            ("loadgen_bench", loadgen_bench)]
+    only = set(args)
+    unknown = only - {name for name, _ in mods}
+    if unknown:
+        print(f"# unknown module(s): {', '.join(sorted(unknown))}",
+              flush=True)
+        sys.exit(2)
     print("name,us_per_call,derived")
     for name, mod in mods:
-        if only and only != name:
+        if only and name not in only:
             continue
         t0 = time.time()
         mod.run()

@@ -122,6 +122,9 @@ def _serve_snn(args) -> None:
     print("statuses: " + " ".join(f"{k}={v}"
                                   for k, v in sorted(by_status.items()))
           + f" non-terminal={non_terminal}")
+    print(f"throughput: offered_rps={eng.offered_rps:.1f} "
+          f"achieved_rps={eng.achieved_rps:.1f} "
+          f"(submitted={eng.submitted} served={eng.windows_served})")
     served = [r for r in reqs if r.status == "SERVED"]
     mismatches = 0
     for r in served:

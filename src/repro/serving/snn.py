@@ -97,6 +97,45 @@ through ``candidate -> probed -> promoted -> (rolled-back)``:
   are never served again; a process restart restores the newest
   *complete* on-disk version instead of the seed weights.
 
+Load model
+----------
+
+The engine is **closed-loop-agnostic**: it serves whatever its queue
+holds, and the *submitter* defines the load model.  The legacy
+``run()`` loop is closed-loop — it feeds the queue as fast as
+``step()`` drains it, so it can say nothing about behavior at a given
+offered rate.  :mod:`repro.loadgen` drives the same engine
+**open-loop**: request arrival times come from a seeded arrival
+process fixed before the run, independent of how fast the server
+drains — the regime in which offered-load vs latency curves and
+maximum-sustainable-throughput numbers are meaningful.
+
+**Coordinated omission.**  All latency is measured from the request's
+*intended* arrival time, not from when the submitter got around to
+calling ``submit()``: ``submit()`` honors a pre-stamped
+``t_submit_ms`` (the loadgen runner sets it to the arrival-process
+timestamp), so a backed-up server accrues the queueing delay it
+caused instead of silently re-timing the arrival stream.  Time itself
+is read through the engine's pluggable ``clock``
+(:class:`ServingClock` — wall by default; loadgen substitutes a
+deterministic virtual clock whose serving steps cost a modeled
+duration, making per-status totals and histogram buckets bit-identical
+across replays of the same trace).
+
+**SLO.**  A request meets its SLO when it ends ``SERVED`` within its
+own ``deadline_ms`` (or the run-level SLO target for requests
+without one), end-to-end from intended arrival.  Attainment is
+reported over *offered* requests: rejects, expiries and failures all
+count against it.
+
+**Latency accounting.**  Queue-wait (submit → batch formation) and
+service (submit → terminal) latencies live in fixed-size mergeable
+log-bucketed histograms (:class:`repro.loadgen.histogram.LatencyHistogram`,
+~1.6% worst-case bucket error), not per-request lists — memory stays
+flat at millions of requests and ``stats()`` percentiles are O(buckets),
+while staying nearest-rank-compatible with the committed
+``serve/latency-*`` gate rows.
+
 **Observability.**  ``stats()`` reports rejected / expired / failed /
 retried / degraded / integrity-failure / canary counters plus
 per-request queue-wait and service latency p50/p99 — surfaced by
@@ -121,6 +160,7 @@ import numpy as np
 from repro.core.encoder import encode_from_counter
 from repro.engine import SNNEngine, SNNEnginePlan
 from repro.kernels import ops
+from repro.loadgen.histogram import LatencyHistogram
 from repro.serving.weights import SNNWeightRefresher, VersionedWeightStore
 
 _T_QUANTUM = 8   # window lengths bucket to multiples of this (or t_chunk)
@@ -139,6 +179,20 @@ _CANARY_SEED = 0xC0FFEE
 
 def _now_ms() -> float:
     return time.perf_counter() * 1e3
+
+
+class ServingClock:
+    """The engine's time source (milliseconds).  The default is the
+    wall clock; :mod:`repro.loadgen.runner` substitutes virtual clocks
+    that skip idle gaps and (in deterministic mode) charge serving
+    steps a modeled cost via :meth:`advance_service_ms` — a no-op here
+    because wall time advances by itself during the launch."""
+
+    def now_ms(self) -> float:
+        return _now_ms()
+
+    def advance_service_ms(self, batch_size: int, t_pad: int) -> None:
+        pass
 
 
 @dataclasses.dataclass
@@ -245,7 +299,8 @@ class SNNServingEngine:
                  neuron_class=None, policy: SNNServingPolicy | None = None,
                  on_launch: Callable[[dict], object] | None = None,
                  refresher: SNNWeightRefresher | None = None,
-                 state_dir=None, keep_versions: int = 4):
+                 state_dir=None, keep_versions: int = 4,
+                 clock: ServingClock | None = None):
         if plan.threshold < 1:
             raise ValueError("SNN serving requires threshold >= 1 "
                              "(zero-padded cycles must stay silent)")
@@ -253,6 +308,7 @@ class SNNServingEngine:
         self.policy = policy if policy is not None else SNNServingPolicy()
         self.on_launch = on_launch
         self.refresher = refresher
+        self.clock = clock if clock is not None else ServingClock()
         self._plans = degradation_ladder(plan)
         self._engines: dict[int, SNNEngine] = {0: SNNEngine(plan)}
         self.engine = self._engines[0]
@@ -292,8 +348,11 @@ class SNNServingEngine:
         self.level = 0              # current degradation rung
         self.healthy_steps = 0      # fault-free steps at this rung
         self.degradation_events: list[dict] = []
-        self.queue_wait_ms: list[float] = []
-        self.service_ms: list[float] = []
+        self.queue_wait_hist = LatencyHistogram()
+        self.service_hist = LatencyHistogram()
+        self.submitted = 0          # every submit() call, admitted or not
+        self._t_first_ms: float | None = None   # first submit, clock time
+        self._t_last_ms: float | None = None    # last completed step
         self._step_faults = 0
         self._last_error: str | None = None
         self._canary_window: np.ndarray | None = None
@@ -351,6 +410,11 @@ class SNNServingEngine:
         backpressured request ends as ``REJECTED`` with ``error`` set —
         nothing raises, so one bad request can never strand the queue.
         Returns whether the request was admitted."""
+        self.submitted += 1
+        if self._t_first_ms is None:
+            self._t_first_ms = (req.t_submit_ms
+                                if req.t_submit_ms is not None
+                                else self.clock.now_ms())
         error = self._validate(req)
         if error is None and self.policy.max_queue is not None \
                 and len(self.queue) >= self.policy.max_queue:
@@ -363,7 +427,8 @@ class SNNServingEngine:
             return False
         if req.deadline_ms is None:
             req.deadline_ms = self.policy.deadline_ms
-        req.t_submit_ms = _now_ms()
+        if req.t_submit_ms is None:    # loadgen pre-stamps intended arrival
+            req.t_submit_ms = self.clock.now_ms()
         req.status = QUEUED
         self.queue.append(req)
         return True
@@ -381,7 +446,7 @@ class SNNServingEngine:
         """Expire overdue queued requests, then pull up to ``max_batch``
         highest-priority-first (stable, so FIFO within a priority).
         Returns (batch, n_expired)."""
-        now = _now_ms()
+        now = self.clock.now_ms()
         live: list[SNNRequest] = []
         n_expired = 0
         for r in self.queue:
@@ -715,7 +780,7 @@ class SNNServingEngine:
         if not batch:
             return finished
         t0 = time.perf_counter()
-        t_start_ms = t0 * 1e3
+        t_start_ms = self.clock.now_ms()
         self._step_faults = 0
         q = self._t_quantum()
         t_pad = -(-max(self._t_len(r) for r in batch) // q) * q
@@ -724,7 +789,9 @@ class SNNServingEngine:
         if counts is not None:
             counts, unrepaired = self._integrity_guard(batch, counts,
                                                        t_pad)
-        now_ms = _now_ms()
+        self.clock.advance_service_ms(len(batch), t_pad)
+        now_ms = self.clock.now_ms()
+        self._t_last_ms = now_ms
         for i, r in enumerate(batch):
             r.queue_wait_ms = t_start_ms - r.t_submit_ms
             r.service_ms = now_ms - r.t_submit_ms
@@ -738,8 +805,8 @@ class SNNServingEngine:
                 self.version_violations += 1
             if self.neuron_class is not None:
                 r.pred = int(self.neuron_class[int(np.argmax(counts[i]))])
-            self.queue_wait_ms.append(r.queue_wait_ms)
-            self.service_ms.append(r.service_ms)
+            self.queue_wait_hist.record(r.queue_wait_ms)
+            self.service_hist.record(r.service_ms)
             self._finish(r, SERVED)
             self.windows_served += 1
         finished += len(batch)
@@ -792,14 +859,34 @@ class SNNServingEngine:
             return 0.0
         return self.slots_padded / self.slots_offered
 
-    @staticmethod
-    def _pctl(xs: list[float], p: float) -> float:
-        return round(float(np.percentile(xs, p)), 3) if xs else 0.0
+    @property
+    def offered_rps(self) -> float:
+        """Submitted requests per second of clock time spent serving."""
+        return self._rate(self.submitted)
+
+    @property
+    def achieved_rps(self) -> float:
+        """SERVED requests per second of clock time spent serving."""
+        return self._rate(self.windows_served)
+
+    def _rate(self, count: int) -> float:
+        if self._t_first_ms is None or self._t_last_ms is None:
+            return 0.0
+        span_ms = self._t_last_ms - self._t_first_ms
+        return count / span_ms * 1e3 if span_ms > 0 else 0.0
+
+    def per_status(self) -> dict:
+        """Terminal-status totals (the loadgen replay invariant)."""
+        return {SERVED: self.windows_served, REJECTED: self.rejected,
+                EXPIRED: self.expired, FAILED: self.failed}
 
     def stats(self) -> dict:
         """Serving counters for the ``--bench`` report."""
         return {
+            "submitted": self.submitted,
             "windows_served": self.windows_served,
+            "offered_rps": round(self.offered_rps, 3),
+            "achieved_rps": round(self.achieved_rps, 3),
             "batches": self.batches,
             "padded_slot_waste": self.padded_slot_waste,
             "mean_step_ms": round(
@@ -825,8 +912,10 @@ class SNNServingEngine:
             "version_violations": self.version_violations,
             "probe_accuracy": (None if self.last_probe_accuracy is None
                                else round(self.last_probe_accuracy, 4)),
-            "queue_wait_ms_p50": self._pctl(self.queue_wait_ms, 50),
-            "queue_wait_ms_p99": self._pctl(self.queue_wait_ms, 99),
-            "service_ms_p50": self._pctl(self.service_ms, 50),
-            "service_ms_p99": self._pctl(self.service_ms, 99),
+            "queue_wait_ms_p50": round(
+                self.queue_wait_hist.percentile(50), 3),
+            "queue_wait_ms_p99": round(
+                self.queue_wait_hist.percentile(99), 3),
+            "service_ms_p50": round(self.service_hist.percentile(50), 3),
+            "service_ms_p99": round(self.service_hist.percentile(99), 3),
         }

@@ -8,9 +8,10 @@ if str(REPO) not in sys.path:
     sys.path.insert(0, str(REPO))
 
 from benchmarks.run import (GATE_LATENCY_FLOOR_MS,  # noqa: E402
-                            GATE_LATENCY_RATIO, GATE_THRESHOLD,
-                            GATE_TIME_BASE_MIN, GATE_TIME_FLOOR,
-                            check_regressions, load_baseline)
+                            GATE_LATENCY_RATIO, GATE_SLO_DROP,
+                            GATE_THRESHOLD, GATE_TIME_BASE_MIN,
+                            GATE_TIME_FLOOR, check_regressions,
+                            load_baseline)
 
 
 def test_detects_lost_structural_speedup():
@@ -91,6 +92,54 @@ def test_latency_decrease_never_gates():
     base = {"serve/latency-a": {"service_ms_p99": 200.0}}
     rows = {"serve/latency-a": {"service_ms_p99": 1.0}}
     assert check_regressions(base, rows) == []
+
+
+def test_p999_latency_suffix_gates():
+    """The loadgen rows' _ms_p999 tail percentile is gated like the
+    p50/p99 suffixes."""
+    base = {"loadgen/virtual-a": {"e2e_ms_p999": 2.0}}
+    bad = 2.0 * GATE_LATENCY_RATIO + GATE_LATENCY_FLOOR_MS
+    rows = {"loadgen/virtual-a": {"e2e_ms_p999": bad}}
+    msgs = check_regressions(base, rows)
+    assert len(msgs) == 1 and "e2e_ms_p999" in msgs[0]
+
+
+def test_slo_attainment_gates_on_absolute_drop():
+    base = {"loadgen/virtual-a": {"slo_attainment": 0.99}}
+    rows = {"loadgen/virtual-a": {
+        "slo_attainment": 0.99 - GATE_SLO_DROP - 0.01}}
+    msgs = check_regressions(base, rows)
+    assert len(msgs) == 1 and "slo_attainment" in msgs[0]
+    # within the allowance (and any increase) passes
+    ok = {"loadgen/virtual-a": {
+        "slo_attainment": 0.99 - GATE_SLO_DROP + 0.01}}
+    assert check_regressions(base, ok) == []
+    assert check_regressions(
+        base, {"loadgen/virtual-a": {"slo_attainment": 1.0}}) == []
+
+
+def test_sustainable_rps_gates_on_collapse():
+    base = {"loadgen/sweep-5k": {"sustainable_rps": 40000.0}}
+    rows = {"loadgen/sweep-5k": {
+        "sustainable_rps": 40000.0 * (1.0 - GATE_THRESHOLD) * 0.9}}
+    msgs = check_regressions(base, rows)
+    assert len(msgs) == 1 and "sustainable_rps" in msgs[0]
+    ok = {"loadgen/sweep-5k": {
+        "sustainable_rps": 40000.0 * (1.0 - GATE_THRESHOLD + 0.01)}}
+    assert check_regressions(base, ok) == []
+
+
+def test_committed_baseline_has_loadgen_rows():
+    """The gated loadgen rows (deterministic virtual replay + sweep)
+    are committed with coordinated-omission-correct latency metrics."""
+    baseline = load_baseline(str(REPO / "BENCH_kernels.json"))
+    virtual = [row for name, row in baseline.items()
+               if name.startswith("loadgen/virtual-")]
+    assert virtual and all(
+        k in virtual[0] for k in ("slo_attainment", "offered_rps",
+                                  "achieved_rps", "e2e_ms_p50",
+                                  "e2e_ms_p99", "e2e_ms_p999"))
+    assert any("sustainable_rps" in row for row in baseline.values())
 
 
 def test_committed_baseline_has_latency_rows():

@@ -284,7 +284,7 @@ def test_latency_percentiles_recorded():
     st = eng.stats()
     assert st["service_ms_p99"] >= st["service_ms_p50"] > 0
     assert st["queue_wait_ms_p99"] >= st["queue_wait_ms_p50"] >= 0
-    assert len(eng.service_ms) == 7
+    assert eng.service_hist.count == 7
 
 
 # --- the storm acceptance criterion -----------------------------------------

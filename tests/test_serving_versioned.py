@@ -408,7 +408,8 @@ def test_refresh_storm_acceptance(tmp_path):
         state_dir=tmp_path / "replay", keep_versions=64,
         policy=SNNServingPolicy(canary_every=3, reprobe_after=4))
     eng2.run(_requests(48))
-    timing = {k for k in st if k.endswith("_ms") or "_ms_" in k}
+    timing = {k for k in st if k.endswith(("_ms", "_rps"))
+              or "_ms_" in k}
     st2 = eng2.stats()
     assert {k: v for k, v in st2.items() if k not in timing} \
         == {k: v for k, v in st.items() if k not in timing}
