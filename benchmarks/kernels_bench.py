@@ -428,6 +428,32 @@ def run() -> dict:
          ";".join(f"{k}={s_st[k]:.3f}" for k in lat_keys))
     out[("serve-latency", n, w * 32, t_steps, n_req)] = {
         k: s_st[k] for k in lat_keys}
+
+    # ...and the same pass with the crash-consistency journal enabled
+    # (fsync'd WAL + periodic snapshots): documents the durability
+    # overhead and gates it with the same increase-direction latency
+    # rule, so journaling can never silently blow the serving budget
+    import shutil
+    import tempfile
+
+    jdir = tempfile.mkdtemp(prefix="bench-journal-")
+    try:
+        j_eng = SNNServingEngine(s_weights, plan_l, journal_dir=jdir,
+                                 snapshot_every=4)
+        j_eng.run(_latency_reqs(0))        # warm all T-bucket compiles
+        j_eng.queue_wait_hist.reset()
+        j_eng.service_hist.reset()
+        j_eng.run(_latency_reqs(n_req))    # measured steady-state pass
+        j_st = j_eng.stats()
+        j_eng.close()
+    finally:
+        shutil.rmtree(jdir, ignore_errors=True)
+    emit(f"serve/latency-journal-{n}x{w * 32}xT{t_steps}r{n_req}", None,
+         ";".join(f"{k}={j_st[k]:.3f}" for k in lat_keys)
+         + f";journal_syncs={j_st['journal_syncs']}"
+         + f";journal_snapshots={j_st['journal_snapshots']}")
+    out[("serve-latency-journal", n, w * 32, t_steps, n_req)] = {
+        k: j_st[k] for k in lat_keys}
     return out
 
 

@@ -72,15 +72,55 @@ def _make_engine(args, workload, mode: str):
     clock = make_clock(mode, ServiceModel(
         base_ms=args.model_base_ms, per_slot_ms=args.model_slot_ms,
         per_cycle_ms=args.model_cycle_ms))
-    return SNNServingEngine(weights, plan, policy=policy, clock=clock)
+    injector = _make_injector(args)
+    return SNNServingEngine(weights, plan, policy=policy, clock=clock,
+                            on_launch=injector,
+                            journal_dir=getattr(args, "journal_dir", None),
+                            snapshot_every=getattr(args, "snapshot_every",
+                                                   256))
+
+
+def _make_injector(args):
+    """A crash-point injector when one is armed (chaos children), else
+    None — a journal-less or clean run never consults a hook."""
+    point = getattr(args, "crash_point", None)
+    if not point or point == "none":
+        return None
+    from repro.serving.faults import FaultInjector, FaultSpec
+
+    field = {"before_dispatch": "p_crash_before_dispatch",
+             "after_serve": "p_crash_after_serve_before_journal",
+             "mid_snapshot": "p_crash_mid_snapshot"}[point]
+    return FaultInjector(FaultSpec(seed=args.crash_seed,
+                                   **{field: args.crash_p}))
 
 
 def _run_once(args, workload, rows):
     from repro.loadgen.runner import run_rows
 
     eng = _make_engine(args, workload, args.mode)
-    return run_rows(eng, workload, rows, slo_ms=args.slo_ms,
-                    verify_payloads=args.verify_payloads)
+    resume = (eng.journal_resume_offset
+              if getattr(args, "resume_from_journal", False) else 0)
+    if resume:
+        print(f"loadgen: resuming from journaled offset {resume} "
+              f"({eng.journal_recovered} requests re-queued)")
+    rep = run_rows(eng, workload, rows, slo_ms=args.slo_ms,
+                   verify_payloads=args.verify_payloads,
+                   resume_offset=resume)
+    eng.close()
+    # cumulative (recovered + this run) engine truth for the chaos
+    # harness's cross-restart audit; per-run LoadReport fields only
+    # cover the rows offered by this process
+    rep.engine_totals = {
+        "per_status": eng.per_status(), "submitted": eng.submitted,
+        "steps": eng.steps,
+        "e2e_ms_p50": round(eng.service_hist.percentile(50), 3),
+        "e2e_ms_p99": round(eng.service_hist.percentile(99), 3),
+        "e2e_ms_p999": round(eng.service_hist.percentile(99.9), 3),
+        "queue_wait_ms_p50": round(eng.queue_wait_hist.percentile(50), 3),
+        "queue_wait_ms_p99": round(eng.queue_wait_hist.percentile(99), 3),
+    }
+    return rep
 
 
 def main(argv=None) -> None:
@@ -150,6 +190,29 @@ def main(argv=None) -> None:
     ap.add_argument("--hist-out", default=None,
                     help="write the run's latency histograms (JSON) "
                          "here")
+    # crash-consistency journal
+    ap.add_argument("--journal-dir", default=None,
+                    help="journal request lifecycle + engine snapshots "
+                         "here; construction over an existing dir "
+                         "recovers the crashed engine state")
+    ap.add_argument("--resume-from-journal", action="store_true",
+                    help="continue the trace from the last journaled "
+                         "offset instead of re-offering from row 0")
+    ap.add_argument("--snapshot-every", type=int, default=256,
+                    help="serving steps between journal snapshots "
+                         "(0 = only the final close() snapshot)")
+    ap.add_argument("--crash-point", default="none",
+                    choices=["none", "before_dispatch", "after_serve",
+                             "mid_snapshot"],
+                    help="arm one seeded whole-process crash point "
+                         "(the kill-restart chaos harness's knob)")
+    ap.add_argument("--crash-p", type=float, default=0.01,
+                    help="per-consult crash probability when armed")
+    ap.add_argument("--crash-seed", type=int, default=0,
+                    help="crash-draw seed (distinct per restart)")
+    ap.add_argument("--report-out", default=None,
+                    help="write the full run report (incl. cumulative "
+                         "engine totals) as JSON here")
     args = ap.parse_args(argv)
 
     from repro.loadgen import generate_rows, read_trace, write_trace
@@ -201,6 +264,10 @@ def main(argv=None) -> None:
     rep = _run_once(args, workload, rows)
     print("loadgen: " + rep.summary())
     status = 0
+    if args.report_out:
+        with open(args.report_out, "w") as fh:
+            json.dump({**rep.to_dict(),
+                       "engine_totals": rep.engine_totals}, fh)
     if args.check:
         rep2 = _run_once(args, workload, rows)
         same = (rep.per_status == rep2.per_status

@@ -171,6 +171,140 @@ def _serve_snn(args) -> None:
         sys.exit(1)
 
 
+def _chaos_snn(args) -> None:
+    """Seeded kill–restart chaos harness for the crash-consistent SNN
+    serving engine.
+
+    Drives the committed loadgen trace through a journaled engine in a
+    *subprocess*, arming one whole-process crash point per restart
+    (rotating ``before_dispatch`` → ``after_serve`` → ``mid_snapshot``,
+    so every injection site is exercised).  A crashing child dies via
+    ``os._exit(73)`` — user-space journal buffers lost, fsync'd records
+    kept — and the harness restarts it with ``--resume-from-journal``
+    until, after ``--chaos-crashes`` induced crashes, a clean child
+    completes the trace.  A crash-free journal-less reference run over
+    the same trace (same virtual clock, same seeds) then defines
+    ground truth, and the audit asserts:
+
+    * every offered request has exactly one terminal-ledger entry
+      (zero lost ADMITs, zero duplicates — rids cover 0..n-1 once);
+    * zero duplicate SERVEs by payload content hash;
+    * every SERVED entry is attributable to a weight version;
+    * the recovered engine's cumulative per-status totals and latency
+      histogram percentiles are bit-identical to the crash-free
+      replay.  (``steps`` may legitimately exceed the reference by up
+      to one re-dispatched batch per crash and is not compared.)
+
+    Exits nonzero on any violation.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+    import tempfile
+
+    from repro.loadgen import read_trace
+    from repro.serving import CRASH_EXIT_CODE, RequestJournal
+
+    trace = args.trace or "benchmarks/traces/smoke_50k.json"
+    header, _ = read_trace(trace)
+    n = header["n_requests"]
+    workdir = args.state_dir or tempfile.mkdtemp(prefix="snn-chaos-")
+    jdir = os.path.join(workdir, "journal")
+    report = os.path.join(workdir, "report.json")
+    ref_report = os.path.join(workdir, "reference.json")
+    base = [sys.executable, "-m", "repro.launch.loadgen",
+            "--trace", trace, "--mode", "virtual"]
+    # per-consult crash probabilities: dispatch/serve points are
+    # consulted every step, mid_snapshot only once per snapshot — its
+    # p must be much higher to fire before the trace drains
+    points = [("before_dispatch", 0.02), ("after_serve", 0.02),
+              ("mid_snapshot", 0.5)]
+    crashes, restart = 0, 0
+    max_restarts = args.chaos_crashes + 10
+    while True:
+        point, crash_p = (points[restart % len(points)]
+                          if crashes < args.chaos_crashes
+                          else ("none", 0.0))
+        cmd = base + ["--journal-dir", jdir, "--resume-from-journal",
+                      "--snapshot-every", "16", "--report-out", report]
+        if point != "none":
+            cmd += ["--crash-point", point, "--crash-p", str(crash_p),
+                    "--crash-seed",
+                    str(args.chaos_seed * 1000 + restart)]
+        rc = subprocess.run(cmd).returncode
+        if rc == CRASH_EXIT_CODE:
+            crashes += 1
+            restart += 1
+            print(f"chaos: induced crash #{crashes} at point "
+                  f"'{point}' (restart {restart})")
+            if restart > max_restarts:
+                print("chaos: FAIL — restart budget exhausted")
+                sys.exit(1)
+            continue
+        if rc != 0:
+            print(f"chaos: FAIL — child exited {rc} (not a crash)")
+            sys.exit(1)
+        break
+    print(f"chaos: trace complete after {crashes} induced crashes / "
+          f"{restart} restarts")
+    subprocess.run(base + ["--report-out", ref_report], check=True,
+                   stdout=subprocess.DEVNULL)
+
+    # --- audit ----------------------------------------------------------
+    violations = []
+    ledger = RequestJournal(jdir).read_ledger()
+    rids = [r["rid"] for r in ledger]
+    if len(rids) != len(set(rids)):
+        violations.append(f"duplicate terminal-ledger entries: "
+                          f"{len(rids) - len(set(rids))}")
+    if set(rids) != set(range(n)):
+        lost = sorted(set(range(n)) - set(rids))[:10]
+        extra = sorted(set(rids) - set(range(n)))[:10]
+        violations.append(f"ledger does not cover 0..{n - 1} exactly "
+                          f"(lost={lost} extra={extra})")
+    served = [r for r in ledger if r["st"] == "SERVED"]
+    shas = [r["sha"] for r in served if r.get("sha")]
+    if len(shas) != len(set(shas)):
+        violations.append("duplicate SERVEs by content hash")
+    unattributed = sum(r.get("ver") is None for r in served)
+    if unattributed:
+        violations.append(f"{unattributed} SERVEs not attributable to "
+                          f"a weight version")
+    ledger_status: dict = {}
+    for r in ledger:
+        ledger_status[r["st"]] = ledger_status.get(r["st"], 0) + 1
+    with open(report) as fh:
+        chaos_totals = json.load(fh)["engine_totals"]
+    with open(ref_report) as fh:
+        ref_totals = json.load(fh)["engine_totals"]
+
+    def _nonzero(d):
+        return {k: v for k, v in d.items() if v}
+
+    if ledger_status != _nonzero(ref_totals["per_status"]):
+        violations.append(f"ledger per-status {ledger_status} != "
+                          f"crash-free {ref_totals['per_status']}")
+    for key in ("per_status", "submitted", "e2e_ms_p50", "e2e_ms_p99",
+                "e2e_ms_p999", "queue_wait_ms_p50", "queue_wait_ms_p99"):
+        if chaos_totals[key] != ref_totals[key]:
+            violations.append(f"recovered {key}={chaos_totals[key]} != "
+                              f"crash-free {ref_totals[key]}")
+    if crashes < args.chaos_crashes:
+        violations.append(f"only {crashes} crashes induced "
+                          f"(wanted {args.chaos_crashes})")
+    print(f"chaos-audit: n={n} ledger={len(ledger)} "
+          f"served={len(served)} statuses="
+          + " ".join(f"{k}={v}" for k, v in sorted(ledger_status.items())))
+    if violations:
+        for v in violations:
+            print(f"chaos-audit: VIOLATION — {v}")
+        sys.exit(1)
+    print("chaos-audit: ok — every request terminal exactly once, "
+          "zero lost admits, zero duplicate serves, counters match "
+          "crash-free replay")
+
+
 def main() -> None:
     """CLI launcher: serve any assigned architecture (reduced size on
     CPU) with the continuous-batching engine, or the paper's SNN through
@@ -220,9 +354,25 @@ def main() -> None:
                     help="persist promoted weight versions here "
                          "(atomic checkpoints; restart restores the "
                          "newest complete version)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="kill-restart chaos harness: drive --trace "
+                         "through a journaled subprocess engine with "
+                         "seeded induced crashes, restart-resume it, "
+                         "and audit exactly-once terminal accounting "
+                         "(wenquxing-snn only)")
+    ap.add_argument("--chaos-seed", type=int, default=1,
+                    help="seed for the induced-crash draws")
+    ap.add_argument("--chaos-crashes", type=int, default=3,
+                    help="induced crashes before the clean final run "
+                         "(rotates through the 3 injection points)")
+    ap.add_argument("--trace", default=None,
+                    help="loadgen trace the chaos harness replays "
+                         "(default: benchmarks/traces/smoke_50k.json)")
     args = ap.parse_args()
 
     if args.arch == "wenquxing-snn":
+        if args.chaos:
+            return _chaos_snn(args)
         return _serve_snn(args)
 
     cfg = reduced(get_config(args.arch))

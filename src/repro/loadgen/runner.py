@@ -152,17 +152,26 @@ def _round3(x: float) -> float:
 def run_rows(engine: SNNServingEngine, workload: WorkloadSpec,
              rows: list[dict], *, slo_ms: float = 50.0,
              verify_payloads: bool = False, keep_payloads: bool = False,
-             max_steps: int = 50_000_000) -> LoadReport:
+             max_steps: int = 50_000_000,
+             resume_offset: int = 0) -> LoadReport:
     """Drive one engine through one recorded request stream.
 
     The engine must have been constructed with a loadgen clock
-    (:func:`make_clock`); its queue must be empty.  Rows are injected
-    strictly by intended timestamp, each request's ``t_submit_ms`` is
-    pre-stamped to that timestamp (the coordinated-omission guarantee),
-    and payloads are freed as requests terminate unless
-    ``keep_payloads`` — memory stays flat at millions of requests.
+    (:func:`make_clock`).  Its queue is normally empty, but a
+    journal-recovered engine may start with re-queued requests (and a
+    restored clock) — the loop drains them before the next arrival.
+    ``resume_offset`` skips rows a previous (crashed) run already made
+    durable: pass ``engine.journal_resume_offset`` so a restarted
+    replay continues from the last journaled offset instead of
+    re-offering from row 0.  Rows are injected strictly by intended
+    timestamp, each request's ``t_submit_ms`` is pre-stamped to that
+    timestamp (the coordinated-omission guarantee), and payloads are
+    freed as requests terminate unless ``keep_payloads`` — memory stays
+    flat at millions of requests.
     """
     clock = engine.clock
+    if resume_offset:
+        rows = rows[resume_offset:]
     reqs: list = []
     inflight: list = []     # admitted, not yet freed — stays ~queue-sized
     i, n, steps = 0, len(rows), 0

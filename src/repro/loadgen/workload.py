@@ -188,10 +188,16 @@ class WorkloadSpec:
                 f"(recorded {row.get('sha')}, regenerated "
                 f"{self.payload_sha(row)})")
         payload = self.payload(row)
+        # the row rides along so a journaled engine can ADMIT-log the
+        # tiny descriptor (and re-materialize after a crash) instead of
+        # the payload bytes; content_sha is the exactly-once audit key
         if row["kind"] == KIND_INTENSITY:
             return SNNRequest(rid=row["rid"], intensities=payload,
                               n_steps=row["t"], seed=row["seed"],
                               priority=row["prio"],
-                              deadline_ms=row["ddl"])
+                              deadline_ms=row["ddl"],
+                              trace_row=dict(row),
+                              content_sha=row.get("sha"))
         return SNNRequest(rid=row["rid"], window=payload,
-                          priority=row["prio"], deadline_ms=row["ddl"])
+                          priority=row["prio"], deadline_ms=row["ddl"],
+                          trace_row=dict(row), content_sha=row.get("sha"))

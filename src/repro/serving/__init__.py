@@ -5,12 +5,18 @@ cache slots.  SNN path: :class:`SNNServingEngine`, dynamic window
 batching over the unified SNN engine with a fault-tolerant request
 lifecycle (:class:`SNNServingPolicy`), versioned train-while-serving
 weights (:mod:`repro.serving.weights` — double-buffered swap,
-probe-gated promotion, checkpointed rollback) and a deterministic
-fault injection harness (:mod:`repro.serving.faults`).
+probe-gated promotion, checkpointed rollback), a deterministic
+fault injection harness (:mod:`repro.serving.faults`), and a
+crash-consistency layer (:mod:`repro.serving.journal` — fsync'd
+CRC-framed request WAL, engine-state snapshots, exactly-once terminal
+ledger, snapshot+tail recovery on construction).
 """
 
 from repro.serving.engine import Request, ServingEngine
-from repro.serving.faults import FaultInjectedError, FaultInjector, FaultSpec
+from repro.serving.faults import (CRASH_EXIT_CODE, FaultInjectedError,
+                                  FaultInjector, FaultSpec)
+from repro.serving.journal import (JournalError, RequestJournal, RingLog,
+                                   replay)
 from repro.serving.snn import (SNNRequest, SNNServingEngine,
                                SNNServingPolicy, TERMINAL_STATUSES,
                                degradation_ladder)
@@ -22,7 +28,8 @@ __all__ = [
     "Request", "ServingEngine",
     "SNNRequest", "SNNServingEngine", "SNNServingPolicy",
     "TERMINAL_STATUSES", "degradation_ladder",
-    "FaultInjectedError", "FaultInjector", "FaultSpec",
+    "CRASH_EXIT_CODE", "FaultInjectedError", "FaultInjector", "FaultSpec",
+    "JournalError", "RequestJournal", "RingLog", "replay",
     "SNNRefreshPolicy", "SNNWeightRefresher", "VersionedWeightStore",
     "WeightVersion", "weight_fingerprint",
 ]

@@ -41,14 +41,39 @@ older injectors):
   process crash mid-checkpoint: the store leaves a torn ``step_N.tmp``
   dropping and aborts the promotion, exactly what a restarted process
   would find on disk.
+
+Crash-consistent serving (PR 9) adds *whole-process* crash points,
+consulted by the engine only when a :class:`~repro.serving.journal.
+RequestJournal` is attached (a journal-less engine never sends these
+kinds, so legacy storms replay bit-identically):
+
+* ``kind="crash_before_dispatch"`` — after the batch's ADMIT+DISPATCH
+  records are fsync'd, before the serve launch.
+* ``kind="crash_after_serve"`` — after counts are computed, before any
+  TERMINAL record is journaled (``p_crash_after_serve_before_journal``).
+* ``kind="crash_mid_snapshot"`` — after ``snapshot_N.json.tmp`` is
+  written, before the atomic rename.
+
+A firing crash point calls ``crash_hook(kind)`` — by default
+``os._exit(73)``, the real ``kill -9`` model: user-space journal
+buffers die, fsync'd records survive, and the kill–restart harness
+recognizes exit code 73 as an induced crash.  Tests substitute a hook
+that raises, then ``journal.abandon()`` to drop the buffers the dead
+process would have lost.  Crash draws happen only when the matching
+probability is nonzero, so a chaos child running "clean" (all crash
+probabilities 0) is bit-identical to a journal-less run.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
+from typing import Callable
 
 import numpy as np
+
+CRASH_EXIT_CODE = 73   # the kill–restart harness's "induced crash" code
 
 
 class FaultInjectedError(RuntimeError):
@@ -69,11 +94,17 @@ class FaultSpec:
     p_refresh_stall: float = 0.0    # P[refresh stalls before training]
     refresh_stall_ms: float = 0.0   # refresh stall duration
     p_save_crash: float = 0.0       # P[crash mid-checkpoint-save]
+    # --- whole-process crash points (journaled engines only) ------------
+    p_crash_before_dispatch: float = 0.0        # post-WAL-sync, pre-launch
+    p_crash_after_serve_before_journal: float = 0.0  # pre-TERMINAL write
+    p_crash_mid_snapshot: float = 0.0           # tmp written, pre-rename
 
     def __post_init__(self):
         for name in ("p_launch_error", "p_corrupt", "p_stall",
                      "p_refresh_corrupt", "p_refresh_stall",
-                     "p_save_crash"):
+                     "p_save_crash", "p_crash_before_dispatch",
+                     "p_crash_after_serve_before_journal",
+                     "p_crash_mid_snapshot"):
             p = getattr(self, name)
             if not 0.0 <= p <= 1.0:
                 raise ValueError(f"{name} must be in [0, 1], got {p}")
@@ -97,9 +128,13 @@ class FaultInjector:
     of (spec, launch sequence).
     """
 
-    def __init__(self, spec: FaultSpec | None = None, **kwargs):
+    def __init__(self, spec: FaultSpec | None = None,
+                 crash_hook: Callable[[str], None] | None = None,
+                 **kwargs):
         self.spec = spec if spec is not None else FaultSpec(**kwargs)
         self.rng = np.random.default_rng(self.spec.seed)
+        self.crash_hook = (crash_hook if crash_hook is not None
+                           else lambda kind: os._exit(CRASH_EXIT_CODE))
         self.launches = 0
         self.errors = 0
         self.corruptions = 0
@@ -107,12 +142,27 @@ class FaultInjector:
         self.refresh_corruptions = 0
         self.refresh_stalls = 0
         self.save_crashes = 0
+        self.crashes = 0
         self._burst_left = 0
+
+    _CRASH_P = {
+        "crash_before_dispatch": "p_crash_before_dispatch",
+        "crash_after_serve": "p_crash_after_serve_before_journal",
+        "crash_mid_snapshot": "p_crash_mid_snapshot",
+    }
 
     def __call__(self, ctx: dict):
         self.launches += 1
         sp = self.spec
         kind = ctx.get("kind", "serve")
+        if kind in self._CRASH_P:
+            # draw only when armed, so a clean chaos child replays
+            # bit-identically with a journal-less storm
+            p = getattr(sp, self._CRASH_P[kind])
+            if p > 0.0 and self.rng.random() < p:
+                self.crashes += 1
+                self.crash_hook(kind)   # default: os._exit(73), no return
+            return None
         if kind == "refresh":
             draw = self.rng.random(2)
             if draw[0] < sp.p_refresh_stall and sp.refresh_stall_ms > 0:
@@ -172,4 +222,5 @@ class FaultInjector:
                 "fault_stalls": self.stalls,
                 "fault_refresh_corruptions": self.refresh_corruptions,
                 "fault_refresh_stalls": self.refresh_stalls,
-                "fault_save_crashes": self.save_crashes}
+                "fault_save_crashes": self.save_crashes,
+                "fault_crashes": self.crashes}

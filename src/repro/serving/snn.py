@@ -136,6 +136,62 @@ flat at millions of requests and ``stats()`` percentiles are O(buckets),
 while staying nearest-rank-compatible with the committed
 ``serve/latency-*`` gate rows.
 
+Crash consistency
+-----------------
+
+With ``journal_dir`` set, the engine writes every request lifecycle
+transition through a :class:`repro.serving.journal.RequestJournal` —
+an append-only, CRC-framed write-ahead log with periodic engine-state
+snapshots — so process death (kill -9, power loss, an injected
+``os._exit``) never loses admitted work or breaks the "every request
+reaches a terminal, attributable status" invariant.
+
+**Journal format.**  Three WAL event kinds: ``ADMIT`` (rid, intended
+arrival, priority, effective deadline, payload content hash, and the
+payload *descriptor* — the loadgen trace row when one rides on the
+request, else the inline payload), ``DISPATCH`` (one batch's rids +
+pinned weight version + pad waste), ``TERMINAL`` (status,
+served_version, queue-wait/service latency, content hash).  Snapshots
+capture the full engine state — queue contents as ADMIT records,
+robustness counters, latency histograms via their JSON round-trip, the
+degradation rung, and the live weight version — then rotate the WAL
+(old segment deleted), bounding recovery work.  A separate append-only
+``ledger.log`` records one entry per terminal request and is never
+truncated: it is the cross-restart exactly-once audit substrate.
+
+**Durability points (group commit).**  ADMIT records buffer at
+``submit()`` and are fsync'd together with the DISPATCH record before
+the serve launch; TERMINAL records are fsync'd at step end.  A ledger
+entry is appended only *after* its WAL terminal is durable, so the
+ledger never runs ahead of the WAL.
+
+**Recovery invariants.**  Constructing an engine over an existing
+``journal_dir`` replays snapshot + WAL tail: a torn *final* record is
+physically truncated (it was never acknowledged), a CRC-corrupt
+*mid-log* record fails loudly (acknowledged state rotted), and a
+``snapshot_N.json.tmp`` dropping from a crash mid-snapshot is ignored
+(the previous snapshot + full log win).  Counters and histograms
+resume from the replayed state; every ADMIT without a TERMINAL is
+re-queued idempotently — trace-backed payloads re-materialize from the
+row's seeds and are verified against the recorded content hash — and
+the virtual clock resumes from the journal's time high-water mark.
+The live weight version is reconciled against
+:class:`~repro.serving.weights.VersionedWeightStore`'s own restart
+path (newest complete checkpoint wins; a disagreement only counts
+``version_reconciliations``).  ``journal_resume_offset`` (one past the
+highest journaled rid) lets a replayed trace run continue where the
+dead process stopped instead of re-offering from row 0.
+
+**Exactly-once argument.**  A rid is re-queued only when its WAL
+TERMINAL is missing; a ledger entry exists only when that WAL terminal
+was durable first.  Therefore a crashed-then-recovered request can
+never acquire two ledger entries: either its terminal was durable (it
+is *not* re-queued) or it was not (no ledger entry exists, and the
+re-serve writes the only one).  Replayed requests keep their original
+rids and content hashes, so the kill–restart chaos harness
+(``serve --chaos``) can audit zero lost ADMITs and zero duplicate
+SERVEs by content hash across any number of crashes.
+
 **Observability.**  ``stats()`` reports rejected / expired / failed /
 retried / degraded / integrity-failure / canary counters plus
 per-request queue-wait and service latency p50/p99 — surfaced by
@@ -161,9 +217,13 @@ from repro.core.encoder import encode_from_counter
 from repro.engine import SNNEngine, SNNEnginePlan
 from repro.kernels import ops
 from repro.loadgen.histogram import LatencyHistogram
+from repro.serving.journal import (_COUNTER_KEYS, RequestJournal, RingLog,
+                                   replay)
 from repro.serving.weights import SNNWeightRefresher, VersionedWeightStore
 
 _T_QUANTUM = 8   # window lengths bucket to multiples of this (or t_chunk)
+_ERR_MAX = 256   # per-request error strings are capped at this length
+_EVENT_RING = 256  # degradation/refresh telemetry kept in memory
 
 # --- request lifecycle -------------------------------------------------------
 
@@ -179,6 +239,14 @@ _CANARY_SEED = 0xC0FFEE
 
 def _now_ms() -> float:
     return time.perf_counter() * 1e3
+
+
+def _cap_error(error: str | None) -> str | None:
+    """Bound per-request error strings (millions of FAILED requests
+    must not grow memory — or the journal — unboundedly)."""
+    if error is not None and len(error) > _ERR_MAX:
+        return error[:_ERR_MAX] + "...[truncated]"
+    return error
 
 
 class ServingClock:
@@ -216,6 +284,8 @@ class SNNRequest:
     service_ms: float | None = None     # submit -> terminal
     t_submit_ms: float | None = None    # perf_counter stamp at admission
     served_version: int | None = None   # weight version the counts came from
+    trace_row: dict | None = None       # loadgen row (journal descriptor)
+    content_sha: str | None = None      # payload content hash (audit key)
 
     @property
     def terminal(self) -> bool:
@@ -300,7 +370,8 @@ class SNNServingEngine:
                  on_launch: Callable[[dict], object] | None = None,
                  refresher: SNNWeightRefresher | None = None,
                  state_dir=None, keep_versions: int = 4,
-                 clock: ServingClock | None = None):
+                 clock: ServingClock | None = None,
+                 journal_dir=None, snapshot_every: int = 256):
         if plan.threshold < 1:
             raise ValueError("SNN serving requires threshold >= 1 "
                              "(zero-padded cycles must stay silent)")
@@ -347,7 +418,7 @@ class SNNServingEngine:
         self.canary_failures = 0
         self.level = 0              # current degradation rung
         self.healthy_steps = 0      # fault-free steps at this rung
-        self.degradation_events: list[dict] = []
+        self.degradation_events = RingLog(cap=_EVENT_RING)
         self.queue_wait_hist = LatencyHistogram()
         self.service_hist = LatencyHistogram()
         self.submitted = 0          # every submit() call, admitted or not
@@ -366,8 +437,19 @@ class SNNServingEngine:
         self.refresh_failed = 0       # candidate production / probe died
         self.version_violations = 0   # served from a non-live version
         self.last_probe_accuracy: float | None = None
-        self.refresh_events: list[dict] = []
+        self.refresh_events = RingLog(cap=_EVENT_RING)
         self._last_refresh_step = 0
+        # --- crash-consistency journal ---------------------------------
+        self.journal: RequestJournal | None = None
+        self.snapshot_every = int(snapshot_every)
+        self.journal_recovered = 0      # requests re-queued at recovery
+        self.journal_resume_offset = 0  # trace offset a resumed run uses
+        self.version_reconciliations = 0
+        self._journal_last_rid = -1
+        self._admit_records: dict[int, dict] = {}
+        self._pending_ledger: list[dict] = []
+        if journal_dir is not None:
+            self._recover_from_journal(journal_dir)
 
     @property
     def weights(self):
@@ -422,8 +504,11 @@ class SNNServingEngine:
                      f"(max_queue={self.policy.max_queue}), "
                      "backpressure reject")
         if error is not None:
-            req.status, req.error, req.done = REJECTED, error, True
+            req.status, req.error, req.done = REJECTED, _cap_error(error), \
+                True
             self.rejected += 1
+            if self.journal is not None:
+                self._journal_terminal(req, noadmit=True)
             return False
         if req.deadline_ms is None:
             req.deadline_ms = self.policy.deadline_ms
@@ -431,6 +516,8 @@ class SNNServingEngine:
             req.t_submit_ms = self.clock.now_ms()
         req.status = QUEUED
         self.queue.append(req)
+        if self.journal is not None:
+            self._journal_admit(req)
         return True
 
     def _t_quantum(self) -> int:
@@ -466,11 +553,200 @@ class SNNServingEngine:
 
     def _finish(self, req: SNNRequest, status: str,
                 error: str | None = None) -> None:
-        req.status, req.error, req.done = status, error, True
+        req.status, req.error, req.done = status, _cap_error(error), True
         if status == EXPIRED:
             self.expired += 1
         elif status == FAILED:
             self.failed += 1
+        if self.journal is not None:
+            self._journal_terminal(req)
+
+    # --- crash-consistency journal -------------------------------------
+
+    def _journal_admit(self, req: SNNRequest) -> None:
+        """Buffered ADMIT record (durable at the next dispatch sync).
+        Trace-backed requests journal the tiny row descriptor — the
+        payload re-materializes from its seeds on recovery — while ad
+        hoc requests journal the payload inline."""
+        rec = {"ev": "A", "rid": req.rid, "ts": req.t_submit_ms,
+               "prio": req.priority, "ddl": req.deadline_ms}
+        if req.content_sha is not None:
+            rec["sha"] = req.content_sha
+        if req.trace_row is not None:
+            rec["row"] = req.trace_row
+        elif req.intensities is not None:
+            rec["payload"] = {"kind": "I",
+                              "inten": req.intensities.tolist(),
+                              "n_steps": int(req.n_steps),
+                              "seed": req.seed}
+        else:
+            rec["payload"] = {"kind": "W", "t": int(req.window.shape[0]),
+                              "win": req.window.reshape(-1).tolist()}
+        self.journal.append(rec)
+        self._admit_records[req.rid] = rec
+        self._journal_last_rid = max(self._journal_last_rid, req.rid)
+
+    def _journal_terminal(self, req: SNNRequest, *,
+                          noadmit: bool = False) -> None:
+        """Buffered TERMINAL record + (post-sync) ledger entry.
+        ``noadmit`` marks a structural reject at submit time — the rid
+        never had an ADMIT, but it was offered, so replay still counts
+        it toward ``submitted`` and the resume offset."""
+        rec = {"ev": "T", "rid": req.rid, "st": req.status,
+               "at": self.clock.now_ms()}
+        if noadmit:
+            rec["noadmit"] = 1
+        if req.served_version is not None:
+            rec["ver"] = req.served_version
+        if req.queue_wait_ms is not None:
+            rec["qw"] = req.queue_wait_ms
+        if req.service_ms is not None:
+            rec["sv"] = req.service_ms
+        if req.content_sha is not None:
+            rec["sha"] = req.content_sha
+        if req.error:
+            rec["err"] = req.error
+        self.journal.append(rec)
+        self._admit_records.pop(req.rid, None)
+        self._journal_last_rid = max(self._journal_last_rid, req.rid)
+        self._pending_ledger.append(
+            {"rid": req.rid, "st": req.status, "sha": req.content_sha,
+             "ver": req.served_version})
+
+    def _journal_sync(self) -> None:
+        """Group commit: make buffered WAL records durable, THEN flush
+        the terminal-ledger entries they cover (ledger ⊆ durable WAL —
+        the exactly-once ordering)."""
+        self.journal.sync()
+        if self._pending_ledger:
+            for rec in self._pending_ledger:
+                self.journal.ledger_append(rec)
+            self._pending_ledger.clear()
+            self.journal.ledger_sync()
+
+    def _consult_crash(self, kind: str) -> None:
+        """Injected whole-process crash point (journaled engines only;
+        the default hook calls ``os._exit`` and never returns)."""
+        if self.on_launch is not None:
+            self.on_launch({"kind": kind, "step": self.steps,
+                            "level": self.level, "batch_size": 0,
+                            "t_lens": []})
+
+    def _snapshot_state(self) -> dict:
+        return {
+            "counters": {k: int(getattr(self, k))
+                         for k in _COUNTER_KEYS},
+            "qw_hist": self.queue_wait_hist.to_dict(),
+            "sv_hist": self.service_hist.to_dict(),
+            "queue": [self._admit_records[r.rid] for r in self.queue
+                      if r.rid in self._admit_records],
+            "last_rid": self._journal_last_rid,
+            "weight_version": self._store.serving.version,
+            "clock_ms": self.clock.now_ms(),
+            "t_first_ms": self._t_first_ms,
+            "t_last_ms": self._t_last_ms,
+            "deg_events": self.degradation_events.to_list(),
+            "deg_dropped": self.degradation_events.dropped,
+            "level": self.level,
+        }
+
+    def _requeue_record(self, rec: dict) -> None:
+        """Re-materialize one recovered ADMIT record into the queue,
+        bypassing ``submit()`` (its counters were already replayed).
+        Trace rows regenerate their payload from the row's seeds and
+        are verified against the recorded content hash — a mismatch
+        fails loudly rather than serving the wrong bytes."""
+        row = rec.get("row")
+        if row is not None:
+            # local import: repro.loadgen.__init__ imports the runner,
+            # which imports this module
+            from repro.loadgen.workload import WorkloadSpec
+
+            req = WorkloadSpec(n_inputs=self.n_inputs).materialize(
+                row, verify=True)
+        else:
+            p = rec["payload"]
+            if p["kind"] == "I":
+                req = SNNRequest(rid=rec["rid"],
+                                 intensities=np.array(p["inten"],
+                                                      np.uint8),
+                                 n_steps=p["n_steps"], seed=p.get("seed"))
+            else:
+                req = SNNRequest(rid=rec["rid"],
+                                 window=np.array(p["win"], np.uint32)
+                                 .reshape(p["t"], self.words))
+        req.priority = rec.get("prio", 0)
+        req.deadline_ms = rec.get("ddl")
+        req.t_submit_ms = rec["ts"]
+        req.content_sha = rec.get("sha")
+        req.status = QUEUED
+        self.queue.append(req)
+        self._admit_records[req.rid] = rec
+
+    def _recover_from_journal(self, journal_dir) -> None:
+        """Adopt the journal's replayed state: counters, histograms,
+        degradation rung, clock high-water mark, and the re-queue set
+        (see the module docstring's crash-consistency section)."""
+        if self.snapshot_every < 0:
+            raise ValueError(f"snapshot_every must be >= 0, got "
+                             f"{self.snapshot_every}")
+        self.journal = j = RequestJournal(journal_dir)
+        snapshot, tail = j.recover()
+        rec = replay(snapshot, tail)
+        if rec.last_rid < 0 and not rec.snapshotted:
+            return      # fresh journal directory: nothing to adopt
+        for k in _COUNTER_KEYS:
+            setattr(self, k, rec.counters[k])
+        if rec.qw_hist:
+            self.queue_wait_hist = LatencyHistogram.from_dict(rec.qw_hist)
+        if rec.sv_hist:
+            self.service_hist = LatencyHistogram.from_dict(rec.sv_hist)
+        self.level = min(rec.level, len(self._plans) - 1)
+        self.degradation_events = RingLog(cap=_EVENT_RING,
+                                          items=rec.deg_events)
+        self.degradation_events.dropped += rec.deg_dropped
+        self._t_first_ms = rec.t_first_ms
+        self._t_last_ms = rec.t_last_ms
+        self._journal_last_rid = rec.last_rid
+        self.journal_resume_offset = rec.resume_offset
+        skip = getattr(self.clock, "skip_to", None)
+        if skip is not None:
+            skip(rec.clock_ms)
+        for adm in rec.pending:
+            self._requeue_record(adm)
+        self.journal_recovered = len(rec.pending)
+        # the store's restart path (newest complete checkpoint) is the
+        # source of truth for weights; a journal/store disagreement is
+        # counted, never fought
+        if (rec.weight_version is not None
+                and rec.weight_version != self._store.serving.version):
+            self.version_reconciliations += 1
+            self._store.events.append({
+                "event": "journal_version_reconciled",
+                "journal": rec.weight_version,
+                "store": self._store.serving.version})
+        # ledger reconciliation: a crash between the WAL terminal sync
+        # and the ledger flush leaves durable terminals the ledger
+        # missed — append them now, before the compacting snapshot
+        # folds the tail away
+        ledger_rids = {r["rid"] for r in j.read_ledger()}
+        missing = [ev for ev in tail if ev.get("ev") == "T"
+                   and int(ev["rid"]) not in ledger_rids]
+        for ev in missing:
+            j.ledger_append({"rid": int(ev["rid"]), "st": ev["st"],
+                             "sha": ev.get("sha"), "ver": ev.get("ver")})
+        if missing:
+            j.ledger_sync()
+        j.snapshot(self._snapshot_state())   # compact: tail -> snapshot
+
+    def close(self) -> None:
+        """Flush and close the journal (final compacting snapshot).
+        A crash *instead of* close loses nothing durable — this only
+        tightens the next recovery."""
+        if self.journal is not None:
+            self._journal_sync()
+            self.journal.snapshot(self._snapshot_state())
+            self.journal.close()
 
     # --- serve ---------------------------------------------------------
 
@@ -778,17 +1054,31 @@ class SNNServingEngine:
         self._pinned = self._store.serving
         batch, finished = self._form_batch()
         if not batch:
+            if self.journal is not None:
+                self._journal_sync()     # expiries found this step
             return finished
         t0 = time.perf_counter()
         t_start_ms = self.clock.now_ms()
         self._step_faults = 0
         q = self._t_quantum()
         t_pad = -(-max(self._t_len(r) for r in batch) // q) * q
+        if self.journal is not None:
+            # group commit: buffered ADMITs + this DISPATCH become
+            # durable together, before the launch can observe them
+            self.journal.append({
+                "ev": "D", "step": self.steps, "n": len(batch),
+                "pad": self.plan.max_batch - len(batch),
+                "ver": self._pinned.version,
+                "rids": [r.rid for r in batch], "at": t_start_ms})
+            self._journal_sync()
+            self._consult_crash("crash_before_dispatch")
         counts = self._launch_with_recovery(batch, t_pad)
         unrepaired: set[int] = set()
         if counts is not None:
             counts, unrepaired = self._integrity_guard(batch, counts,
                                                        t_pad)
+        if self.journal is not None:
+            self._consult_crash("crash_after_serve")
         self.clock.advance_service_ms(len(batch), t_pad)
         now_ms = self.clock.now_ms()
         self._t_last_ms = now_ms
@@ -830,6 +1120,14 @@ class SNNServingEngine:
                 self.healthy_steps = 0
         else:
             self.healthy_steps = 0
+        if self.journal is not None:
+            self._journal_sync()         # TERMINALs durable at step end
+            if self.snapshot_every and \
+                    self.steps % self.snapshot_every == 0:
+                self.journal.snapshot(
+                    self._snapshot_state(),
+                    crash_point=lambda: self._consult_crash(
+                        "crash_mid_snapshot"))
         dt = time.perf_counter() - t0
         self.step_seconds += dt
         self.last_step_seconds = dt
@@ -912,6 +1210,16 @@ class SNNServingEngine:
             "version_violations": self.version_violations,
             "probe_accuracy": (None if self.last_probe_accuracy is None
                                else round(self.last_probe_accuracy, 4)),
+            # --- crash-consistency journal ---------------------------
+            **({"journal_records": self.journal.records_appended,
+                "journal_syncs": self.journal.syncs,
+                "journal_snapshots": self.journal.snapshots_taken,
+                "journal_recovered": self.journal_recovered,
+                "journal_resume_offset": self.journal_resume_offset,
+                "version_reconciliations": self.version_reconciliations,
+                "telemetry_dropped": self.degradation_events.dropped
+                + self.refresh_events.dropped}
+               if self.journal is not None else {}),
             "queue_wait_ms_p50": round(
                 self.queue_wait_hist.percentile(50), 3),
             "queue_wait_ms_p99": round(

@@ -49,6 +49,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core.encoder import sample_seeds, sample_seeds_at
 from repro.engine import SNNEngine, SNNEnginePlan, refresh_weights
+from repro.serving.journal import RingLog
 
 
 def weight_fingerprint(weights) -> str:
@@ -104,8 +105,9 @@ class VersionedWeightStore:
         self.promotions = 0            # refresh promotions (not seed)
         self.rejected = 0
         self.rollbacks = 0
+        self.rollback_load_failures = 0  # missing/torn rollback targets
         self.save_crashes = 0
-        self.events: list[dict] = []
+        self.events = RingLog(cap=256)   # bounded audit trail
         self.promoted_order: list[int] = []   # every live-able version
         self.demoted: set[int] = set()        # rolled-back versions
         self._history: dict[int, WeightVersion] = {}
@@ -265,27 +267,63 @@ class VersionedWeightStore:
         trimmed), e.g. for per-version oracle audits."""
         return self._history.get(version)
 
+    def _load_rollback_target(self, tgt_v: int, shape
+                              ) -> WeightVersion | None:
+        """One rollback target's weights, or None when they are
+        unrecoverable (checkpoint missing or torn AND trimmed from the
+        in-memory keep-k history).  Never raises: a torn target is
+        counted, its droppings are purged through the same
+        ``purge_tmp`` path a restart uses, and the caller degrades to
+        the next-older target."""
+        from_disk = (self.ckpt is not None
+                     and tgt_v in self.ckpt.all_steps())
+        if from_disk:
+            try:
+                return self._load(tgt_v, shape, origin="rollback")
+            except Exception as e:  # noqa: BLE001 — torn checkpoint
+                self.rollback_load_failures += 1
+                self.ckpt.purge_tmp()
+                shutil.rmtree(self.ckpt.dir / f"step_{tgt_v}",
+                              ignore_errors=True)
+                self.events.append({
+                    "event": "rollback_target_torn", "version": tgt_v,
+                    "error": f"{type(e).__name__}: {e}"})
+        if tgt_v in self._history:
+            return dataclasses.replace(self._history[tgt_v],
+                                       origin="rollback")
+        if not from_disk:
+            self.rollback_load_failures += 1
+            self.events.append({"event": "rollback_target_missing",
+                                "version": tgt_v})
+        return None
+
     def rollback(self, reason: str = "") -> WeightVersion | None:
         """Demote the serving version and queue the previous promoted
         version for the next between-steps swap.  The target's weights
         are re-read from disk when a ``state_dir`` is present —
         bit-exact with the persisted checkpoint — else from the
-        in-memory promotion history.  The demoted version's checkpoint
-        is deleted, so a process restart converges with post-rollback
-        serving (the newest *complete* version on disk is the rollback
-        target, never a demoted bank).  Returns the queued version
-        (None when there is nothing to roll back to)."""
+        in-memory promotion history.  A missing or torn target is
+        *counted and degraded past* (``rollback_load_failures``), never
+        raised: the store walks to the next-older promoted version, and
+        returns None only when every candidate target is gone — the
+        serving bank then stays live, which beats crashing the serve
+        loop over history bookkeeping.  The demoted version's
+        checkpoint is deleted, so a process restart converges with
+        post-rollback serving (the newest *complete* version on disk is
+        the rollback target, never a demoted bank).  Returns the queued
+        version (None when there is nothing usable to roll back to)."""
         with self._lock:
-            tgt_v = self._rollback_target()
-            if tgt_v is None:
-                return None
             cur = self._pending or self._serving
-            if self.ckpt is not None and tgt_v in self.ckpt.all_steps():
-                tgt = self._load(tgt_v, np.asarray(cur.weights).shape,
-                                 origin="rollback")
-            else:
-                tgt = dataclasses.replace(self._history[tgt_v],
-                                          origin="rollback")
+            shape = np.asarray(cur.weights).shape
+            while True:
+                tgt_v = self._rollback_target()
+                if tgt_v is None:
+                    return None
+                tgt = self._load_rollback_target(tgt_v, shape)
+                if tgt is not None:
+                    break
+                # unrecoverable target: demote it and keep walking
+                self.demoted.add(tgt_v)
             self.demoted.add(cur.version)
             if self.ckpt is not None:
                 shutil.rmtree(self.ckpt.dir / f"step_{cur.version}",
@@ -308,6 +346,7 @@ class VersionedWeightStore:
             "versions_promoted": self.promotions,
             "versions_rejected": self.rejected,
             "rollbacks": self.rollbacks,
+            "rollback_load_failures": self.rollback_load_failures,
             "save_crashes": self.save_crashes,
         }
 

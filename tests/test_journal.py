@@ -1,0 +1,450 @@
+"""Crash-consistency suite: the request journal, engine recovery, and
+the kill–restart exactly-once guarantees.
+
+Covers the WAL framing invariants (torn *tail* records truncate
+silently, CRC-corrupt *mid-log* records fail loudly), snapshot
+rotation (a ``snapshot_N.json.tmp`` dropping from a crash mid-snapshot
+is ignored), engine recovery (counters, histograms, queue contents,
+resume offset), the three injected whole-process crash points, the
+terminal-ledger exactly-once argument, the bounded telemetry rings,
+and the rollback count-and-degrade path for missing/torn checkpoints.
+
+Process death is simulated in-process: the crash hook raises, then
+``journal.abandon()`` drops the un-synced user-space buffers — exactly
+what ``kill -9`` at that instant would leave on disk.
+"""
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.encoder import encode_from_counter
+from repro.engine import SNNEnginePlan
+from repro.kernels import ops
+from repro.loadgen.runner import make_clock, run_rows
+from repro.loadgen.workload import WorkloadSpec
+from repro.serving import (FaultInjector, FaultSpec, JournalError,
+                           RequestJournal, RingLog, SNNRequest,
+                           SNNServingEngine, VersionedWeightStore)
+from repro.serving.journal import read_frames, replay
+
+N, W = 20, 4
+PLAN = SNNEnginePlan(threshold=40, leak=3, w_exp=None, max_batch=3)
+
+
+def _weights(seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2**32, (N, W), dtype=np.uint32))
+
+
+def _request(rid, t_steps=8, **kw):
+    rng = np.random.default_rng(300 + rid)
+    return SNNRequest(rid=rid, intensities=rng.integers(
+        0, 256, (70,), dtype=np.uint8), n_steps=t_steps, **kw)
+
+
+def _engine(journal_dir, **kw):
+    kw.setdefault("clock", make_clock("virtual"))
+    return SNNServingEngine(_weights(), PLAN, journal_dir=journal_dir,
+                            **kw)
+
+
+def _oracle(weights, r):
+    win = np.asarray(encode_from_counter(
+        r.seed, jnp.asarray(r.intensities), r.n_steps))
+    win = np.pad(win, ((0, 0), (0, W - win.shape[1])))
+    return np.asarray(ops.infer_window_batch(
+        weights, jnp.asarray(win)[None], threshold=PLAN.threshold,
+        leak=PLAN.leak, backend="ref"))[0]
+
+
+class SimCrash(Exception):
+    """Stands in for process death in in-process crash tests."""
+
+
+def _crash_injector(**spec_kw):
+    def hook(kind):
+        raise SimCrash(kind)
+    return FaultInjector(FaultSpec(**spec_kw), crash_hook=hook)
+
+
+# --- RingLog ----------------------------------------------------------------
+
+def test_ringlog_bounds_and_dropped():
+    r = RingLog(cap=4)
+    for i in range(10):
+        r.append(i)
+    assert len(r) == 4 and r.dropped == 6
+    assert r[0] == 6 and r[-1] == 9
+    assert list(r) == [6, 7, 8, 9]
+    assert r.to_list() == [6, 7, 8, 9]
+    with pytest.raises(ValueError):
+        RingLog(cap=0)
+
+
+def test_engine_telemetry_is_ring_buffered(tmp_path):
+    eng = _engine(str(tmp_path / "j"))
+    assert isinstance(eng.degradation_events, RingLog)
+    assert isinstance(eng.refresh_events, RingLog)
+    for i in range(eng.degradation_events.cap + 50):
+        eng.degradation_events.append({"i": i})
+    assert len(eng.degradation_events) == eng.degradation_events.cap
+    assert eng.degradation_events.dropped == 50
+
+
+def test_error_strings_capped():
+    from repro.serving.snn import _ERR_MAX, _cap_error
+
+    assert _cap_error(None) is None
+    assert _cap_error("short") == "short"
+    capped = _cap_error("x" * 10_000)
+    assert len(capped) <= _ERR_MAX + len("...[truncated]")
+    assert capped.endswith("...[truncated]")
+
+
+# --- WAL framing ------------------------------------------------------------
+
+def _framed(*records):
+    j = RequestJournal.__new__(RequestJournal)  # only want the framing
+    import struct
+    import zlib
+    out = b""
+    for rec in records:
+        payload = json.dumps(rec, sort_keys=True,
+                             separators=(",", ":")).encode()
+        out += struct.pack("<II", len(payload),
+                           zlib.crc32(payload)) + payload
+    return out
+
+
+def test_read_frames_torn_tail_variants():
+    data = _framed({"a": 1}, {"b": 2})
+    # intact
+    recs, valid = read_frames(data)
+    assert recs == [{"a": 1}, {"b": 2}] and valid == len(data)
+    # partial header / partial payload: every strict prefix of the
+    # final record truncates back to the first record's end
+    first_len = len(_framed({"a": 1}))
+    for cut in range(first_len + 1, len(data)):
+        recs, valid = read_frames(data[:cut])
+        assert recs == [{"a": 1}] and valid == first_len
+    # CRC-failed FINAL record is a torn tail, not corruption
+    broken = bytearray(data)
+    broken[-1] ^= 0xFF
+    recs, valid = read_frames(bytes(broken))
+    assert recs == [{"a": 1}] and valid == first_len
+
+
+def test_read_frames_midlog_corruption_raises():
+    data = bytearray(_framed({"a": 1}, {"b": 2}, {"c": 3}))
+    data[10] ^= 0xFF                      # inside record 0's payload
+    with pytest.raises(JournalError, match="CRC mismatch"):
+        read_frames(bytes(data))
+
+
+def test_journal_recover_truncates_torn_tail(tmp_path):
+    j = RequestJournal(tmp_path / "j")
+    j.append({"ev": "A", "rid": 0, "ts": 0.0})
+    j.append({"ev": "A", "rid": 1, "ts": 1.0})
+    j.sync()
+    j.close()
+    wal = tmp_path / "j" / "wal_0.log"
+    data = wal.read_bytes()
+    wal.write_bytes(data[:-3])            # tear the final record
+    j2 = RequestJournal(tmp_path / "j")
+    snapshot, tail = j2.recover()
+    assert snapshot is None
+    assert [e["rid"] for e in tail] == [0]
+    assert j2.torn_tail_truncated == 1
+    assert len(wal.read_bytes()) < len(data)   # physically truncated
+    # appends continue cleanly after the truncation point
+    j2.append({"ev": "A", "rid": 2, "ts": 2.0})
+    j2.sync()
+    j2.close()
+    _, tail = RequestJournal(tmp_path / "j").recover()
+    assert [e["rid"] for e in tail] == [0, 2]
+
+
+def test_snapshot_rotation_and_tmp_ignored(tmp_path):
+    j = RequestJournal(tmp_path / "j")
+    j.append({"ev": "A", "rid": 0, "ts": 0.0})
+    j.snapshot({"counters": {}, "queue": [], "last_rid": 0})
+    assert (tmp_path / "j" / "snapshot_1.json").exists()
+    assert not (tmp_path / "j" / "wal_0.log").exists()   # old seg gone
+    j.append({"ev": "T", "rid": 0, "st": "SERVED", "at": 1.0})
+    j.sync()
+    j.close()
+    # a crash mid-snapshot leaves only the .tmp — recovery must ignore
+    # it and use snapshot_1 + its wal tail
+    (tmp_path / "j" / "snapshot_2.json.tmp").write_text("{garbage")
+    snapshot, tail = RequestJournal(tmp_path / "j").recover()
+    assert snapshot["last_rid"] == 0
+    assert [e["ev"] for e in tail] == ["T"]
+
+
+def test_replay_folds_snapshot_and_tail():
+    rec = replay(None, [
+        {"ev": "A", "rid": 0, "ts": 1.0},
+        {"ev": "A", "rid": 1, "ts": 2.0},
+        {"ev": "D", "step": 0, "n": 2, "pad": 1, "ver": 0, "at": 3.0},
+        {"ev": "T", "rid": 0, "st": "SERVED", "ver": 0, "qw": 1.0,
+         "sv": 2.0, "at": 3.5},
+    ])
+    assert [r["rid"] for r in rec.pending] == [1]
+    assert rec.counters["windows_served"] == 1
+    assert rec.counters["submitted"] == 2
+    assert rec.counters["slots_offered"] == 3
+    assert rec.last_rid == 1 and rec.resume_offset == 2
+    assert rec.weight_version == 0
+    assert rec.clock_ms == 3.5
+
+
+def test_replay_rejects_duplicate_terminal():
+    tail = [{"ev": "T", "rid": 0, "st": "SERVED", "at": 1.0},
+            {"ev": "T", "rid": 0, "st": "SERVED", "at": 2.0}]
+    with pytest.raises(JournalError, match="duplicate TERMINAL"):
+        replay(None, tail)
+
+
+# --- engine recovery --------------------------------------------------------
+
+def test_engine_recovers_counters_queue_and_resume_offset(tmp_path):
+    jdir = str(tmp_path / "j")
+    eng = _engine(jdir, snapshot_every=2)
+    for i in range(7):
+        eng.submit(_request(i))
+    eng.step()
+    eng.step()                       # 6 served, 1 queued, 1 snapshot
+    served, queued = eng.windows_served, len(eng.queue)
+    assert served == 6 and queued == 1
+    eng.journal.abandon()            # kill -9
+
+    eng2 = _engine(jdir, snapshot_every=2)
+    assert eng2.windows_served == served
+    assert eng2.submitted == 7
+    assert len(eng2.queue) == queued
+    assert eng2.journal_recovered == queued
+    assert eng2.journal_resume_offset == 7
+    assert eng2.queue[0].rid == 6    # original id survives recovery
+    # recovered histograms carry the pre-crash samples
+    assert eng2.service_hist.to_dict() == eng.service_hist.to_dict()
+    while eng2.queue:
+        eng2.step()
+    eng2.close()
+    ledger = RequestJournal(jdir).read_ledger()
+    assert sorted(r["rid"] for r in ledger) == list(range(7))
+    assert all(r["st"] == "SERVED" for r in ledger)
+
+
+def test_recovered_request_serves_bit_exact(tmp_path):
+    jdir = str(tmp_path / "j")
+    eng = _engine(jdir)
+    reqs = [_request(i) for i in range(4)]   # max_batch=3: one left over
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    eng.journal.abandon()
+    eng2 = _engine(jdir)
+    assert len(eng2.queue) == 1
+    recovered = eng2.queue[0]
+    eng2.step()
+    assert np.array_equal(recovered.counts, _oracle(_weights(), reqs[3]))
+    eng2.close()
+    ledger = RequestJournal(jdir).read_ledger()
+    assert sorted(x["rid"] for x in ledger) == [0, 1, 2, 3]
+
+
+def test_inline_window_payload_roundtrip(tmp_path):
+    jdir = str(tmp_path / "j")
+    eng = _engine(jdir)
+    rng = np.random.default_rng(5)
+    win = rng.integers(0, 2**32, (8, W), dtype=np.uint32)
+    eng.submit(SNNRequest(rid=0, window=win))
+    eng.submit(SNNRequest(rid=1, window=win.copy()))
+    eng.submit(SNNRequest(rid=2, window=win.copy()))
+    eng.submit(SNNRequest(rid=3, window=win.copy()))  # stays queued
+    eng.step()
+    eng.journal.abandon()
+    eng2 = _engine(jdir)
+    assert len(eng2.queue) == 1 and eng2.queue[0].rid == 3
+    assert np.array_equal(eng2.queue[0].window, win)
+
+
+def test_midlog_corruption_fails_loudly_at_construction(tmp_path):
+    jdir = str(tmp_path / "j")
+    eng = _engine(jdir)
+    for i in range(6):
+        eng.submit(_request(i))
+    eng.step()
+    eng.journal.abandon()            # keep records in the live segment
+    wal = next((tmp_path / "j").glob("wal_*.log"))
+    data = bytearray(wal.read_bytes())
+    data[12] ^= 0xFF                 # inside the first record
+    wal.write_bytes(bytes(data))
+    with pytest.raises(JournalError):
+        _engine(jdir)
+
+
+# --- injected whole-process crash points ------------------------------------
+
+def _run_to_crash(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    with pytest.raises(SimCrash):
+        while eng.queue:
+            eng.step()
+    eng.journal.abandon()
+
+
+def test_crash_before_dispatch_requeues_batch(tmp_path):
+    jdir = str(tmp_path / "j")
+    eng = _engine(jdir,
+                  on_launch=_crash_injector(p_crash_before_dispatch=1.0))
+    _run_to_crash(eng, [_request(i) for i in range(3)])
+    assert eng.windows_served == 0
+    eng2 = _engine(jdir)             # no injector: clean restart
+    # ADMITs + DISPATCH were durable before the crash point fired
+    assert len(eng2.queue) == 3
+    while eng2.queue:
+        eng2.step()
+    eng2.close()
+    ledger = RequestJournal(jdir).read_ledger()
+    assert sorted(r["rid"] for r in ledger) == [0, 1, 2]
+    assert all(r["st"] == "SERVED" for r in ledger)
+
+
+def test_crash_after_serve_reserves_without_duplicates(tmp_path):
+    jdir = str(tmp_path / "j")
+    eng = _engine(jdir, on_launch=_crash_injector(
+        p_crash_after_serve_before_journal=1.0))
+    reqs = [_request(i) for i in range(3)]
+    _run_to_crash(eng, reqs)
+    # counts were computed but no TERMINAL was durable: the serve is
+    # invisible, so recovery re-queues and re-serves — exactly once
+    eng2 = _engine(jdir)
+    assert len(eng2.queue) == 3 and eng2.windows_served == 0
+    while eng2.queue:
+        eng2.step()
+    eng2.close()
+    ledger = RequestJournal(jdir).read_ledger()
+    rids = [r["rid"] for r in ledger]
+    assert sorted(rids) == [0, 1, 2] and len(rids) == len(set(rids))
+
+
+def test_crash_mid_snapshot_recovers_from_log(tmp_path):
+    jdir = str(tmp_path / "j")
+    eng = _engine(jdir, snapshot_every=1,
+                  on_launch=_crash_injector(p_crash_mid_snapshot=1.0))
+    _run_to_crash(eng, [_request(i) for i in range(3)])
+    assert eng.windows_served == 3   # the serve itself completed
+    # only the .tmp dropping exists; the WAL holds everything
+    assert list((tmp_path / "j").glob("snapshot_*.json")) == []
+    assert list((tmp_path / "j").glob("snapshot_*.json.tmp")) != []
+    eng2 = _engine(jdir)
+    assert eng2.windows_served == 3 and len(eng2.queue) == 0
+    eng2.close()
+    ledger = RequestJournal(jdir).read_ledger()
+    assert sorted(r["rid"] for r in ledger) == [0, 1, 2]
+
+
+# --- trace-backed recovery + runner resume ----------------------------------
+
+def test_trace_rows_rematerialize_and_resume(tmp_path):
+    spec = WorkloadSpec(n_inputs=W * 32, seed=3)
+    rows = [spec.sample_row(i, i * 0.5) for i in range(30)]
+    jdir = str(tmp_path / "j")
+    eng = _engine(jdir)
+    run_rows(eng, spec, rows[:10], verify_payloads=True)
+    eng.journal.abandon()            # close() skipped: simulated kill
+    eng2 = _engine(jdir)
+    assert eng2.journal_resume_offset == 10
+    run_rows(eng2, spec, rows,
+             resume_offset=eng2.journal_resume_offset)
+    eng2.close()
+    ledger = RequestJournal(jdir).read_ledger()
+    assert sorted(r["rid"] for r in ledger) == list(range(30))
+    shas = [r["sha"] for r in ledger if r["st"] == "SERVED"]
+    assert len(shas) == len(set(shas))       # no duplicate serves
+    assert all(sha is not None for sha in shas)
+
+
+def test_recovered_trace_payload_hash_mismatch_fails(tmp_path):
+    spec = WorkloadSpec(n_inputs=W * 32, seed=3)
+    rows = [spec.sample_row(i, float(i)) for i in range(4)]
+    jdir = str(tmp_path / "j")
+    eng = _engine(jdir)
+    for row in rows:
+        req = spec.materialize(row)
+        req.t_submit_ms = row["ts"]
+        eng.submit(req)
+    eng.step()                       # 3 served, 1 queued (durable A)
+    eng.journal.abandon()
+    # corrupt the queued row's recorded hash inside the WAL is not
+    # possible without breaking CRC — instead corrupt via a snapshot
+    wal = next((tmp_path / "j").glob("wal_*.log"))
+    recs, _ = read_frames(wal.read_bytes())
+    bad = [dict(r) for r in recs]
+    for r in bad:
+        if r.get("ev") == "A" and "row" in r and r["rid"] == 3:
+            r["row"]["seed"] ^= 1    # payload no longer matches sha
+    j = RequestJournal(jdir)
+    wal.unlink()
+    for r in bad:
+        j.append(r)
+    j.sync()
+    j.close()
+    with pytest.raises(ValueError, match="hash mismatch"):
+        _engine(jdir)
+
+
+# --- rollback count-and-degrade (satellite) ---------------------------------
+
+def _promote(st, weights, version_src=1):
+    cand = st.stage(jnp.asarray(weights, jnp.uint32))
+    assert st.promote(cand)
+    st.swap_if_pending()
+    return cand
+
+
+def test_rollback_degrades_on_torn_checkpoint(tmp_path):
+    st = VersionedWeightStore(_weights(0), state_dir=tmp_path / "w")
+    _promote(st, _weights(1))
+    _promote(st, _weights(2))        # serving v2, rollback target v1
+    # tear v1's checkpoint on disk: every file becomes garbage
+    for p in (tmp_path / "w" / "step_1").iterdir():
+        p.write_bytes(b"torn")
+    tgt = st.rollback(reason="test")
+    # disk load failed but the in-memory history still has v1
+    assert tgt is not None and tgt.version == 1
+    assert st.rollback_load_failures == 1
+    assert any(e["event"] == "rollback_target_torn" for e in st.events)
+
+
+def test_rollback_walks_past_missing_targets():
+    # memory-only store with keep=1: old promoted versions are trimmed
+    # from the in-memory history — the pre-fix code raised KeyError
+    st = VersionedWeightStore(_weights(0), keep=1)
+    for s in (1, 2, 3):
+        _promote(st, _weights(s))
+    assert st.rollback(reason="a") is not None    # v2 still in history
+    st.swap_if_pending()
+    # next targets (v1, v0) were trimmed: count-and-degrade, never raise
+    assert st.rollback(reason="b") is None
+    assert st.rollback_load_failures >= 1
+    assert any(e["event"] == "rollback_target_missing"
+               for e in st.events)
+
+
+def test_journaled_stats_keys(tmp_path):
+    eng = _engine(str(tmp_path / "j"))
+    eng.submit(_request(0))
+    eng.step()
+    s = eng.stats()
+    for key in ("journal_records", "journal_snapshots",
+                "journal_recovered", "journal_resume_offset",
+                "version_reconciliations", "telemetry_dropped"):
+        assert key in s
+    eng.close()
