@@ -19,6 +19,17 @@ arrival timestamp, so every latency is coordinated-omission-correct):
   (virtual clock, deterministic) whose run keeps SLO attainment above
   the floor; ``sustainable_rps`` gates on the drop direction like the
   structural speedup ratios.
+* ``loadgen/overload-1x…`` / ``loadgen/overload-5x…`` — the committed
+  priority-mixed overload trace (``traces/overload_50k.json``) replayed
+  at its recorded rate and time-compressed to 5x, with the adaptive
+  overload controller attached and a seeded service-time-inflation
+  storm on both runs.  Deterministic on the virtual clock, so they
+  gate hard: ``goodput_rps`` on relative collapse,
+  ``high_slo_attainment`` on absolute drop, and the module itself
+  asserts the robustness contract (every request terminal, 5x goodput
+  retains >= ``OVERLOAD_RETENTION`` of the 1x anchor, high-priority
+  attainment >= ``OVERLOAD_HIGH_FLOOR`` under 5x) so a metastable
+  collapse fails CI even before the baseline comparison.
 """
 
 from __future__ import annotations
@@ -31,11 +42,20 @@ from benchmarks.common import emit
 
 TRACE = os.path.join(os.path.dirname(__file__), "traces",
                      "smoke_50k.json")
+OVERLOAD_TRACE = os.path.join(os.path.dirname(__file__), "traces",
+                              "overload_50k.json")
 SLO_MS = 50.0
 SWEEP_FLOOR = 0.95
+OVERLOAD_SCALE = 5.0           # the storm runs the trace at 5x
+OVERLOAD_RETENTION = 0.8       # 5x goodput vs the 1x anchor
+OVERLOAD_HIGH_FLOOR = 0.95     # high-priority SLO attainment under 5x
+# seeded service-time-inflation storm, armed on BOTH overload runs so
+# the 1x anchor is an honest (capacity-sagged) baseline
+OVERLOAD_FAULTS = dict(p_slowdown=0.02, slowdown_factor=3.0,
+                       slowdown_steps=6, seed=5)
 
 
-def _engine(workload, clock):
+def _engine(workload, clock, *, overload=None, injector=None):
     import numpy as np
 
     from repro.core.stdp import init_weights
@@ -49,7 +69,8 @@ def _engine(workload, clock):
     weights = init_weights(64, workload.words, density_seed=0)
     del np  # weights helper owns the arrays
     policy = SNNServingPolicy(max_queue=4096, deadline_ms=200.0)
-    return SNNServingEngine(weights, plan, policy=policy, clock=clock)
+    return SNNServingEngine(weights, plan, policy=policy, clock=clock,
+                            on_launch=injector, overload=overload)
 
 
 def _report_metrics(rep, *, gate_slo: bool) -> dict:
@@ -135,6 +156,81 @@ def run() -> dict:
          f";e2e_ms_p99={srep.e2e_ms_p99}")
     out["sweep-5k"] = {"sustainable_rps": rate,
                        "slo_attainment": srep.slo_attainment}
+
+    # --- overload storm: controller at 1x and 5x (virtual) ----------
+    out.update(_overload_rows())
+    return out
+
+
+def _overload_run(workload, rows, base_rps: float):
+    from repro.loadgen.runner import make_clock, run_rows
+    from repro.serving.faults import FaultInjector, FaultSpec
+    from repro.serving.overload import storm_policy
+
+    eng = _engine(workload, make_clock("virtual"),
+                  overload=storm_policy(base_rps),
+                  injector=FaultInjector(FaultSpec(**OVERLOAD_FAULTS)))
+    rep = run_rows(eng, workload, rows, slo_ms=SLO_MS)
+    return rep, eng
+
+
+def _overload_metrics(rep, eng) -> dict:
+    st = eng.stats()
+    return {
+        "offered_rps": rep.offered_rps,
+        "goodput_rps": rep.goodput_rps,
+        "slo_attainment": rep.slo_attainment,
+        "high_slo_attainment":
+            rep.slo_attainment_by_priority.get("1", 0.0),
+        "non_terminal": rep.non_terminal,
+        "e2e_ms_p99": rep.e2e_ms_p99,
+        "served": rep.per_status.get("SERVED", 0),
+        "shed_admission": st["shed_admission"],
+        "shed_low_priority": st["shed_low_priority"],
+        "shed_codel": st["shed_codel"],
+        "admit_rate_rps": st["admit_rate_rps"],
+    }
+
+
+def _overload_rows() -> dict:
+    from repro.loadgen import WorkloadSpec, read_trace, scale_rows
+
+    header, rows = read_trace(OVERLOAD_TRACE)
+    workload = WorkloadSpec.from_dict(header["workload"])
+    base_rps = float(header["arrivals"]["rate_rps"])
+    kreq = header["n_requests"] // 1000
+
+    out: dict = {}
+    reps = {}
+    for factor, tag in ((1.0, "1x"), (OVERLOAD_SCALE,
+                                      f"{OVERLOAD_SCALE:.0f}x")):
+        r = rows if factor == 1.0 else scale_rows(rows, factor)
+        t0 = time.perf_counter()
+        rep, eng = _overload_run(workload, r, base_rps)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        name = f"overload-{tag}-{kreq}k@{base_rps * factor:.0f}"
+        metrics = _overload_metrics(rep, eng)
+        emit(f"loadgen/{name}", wall_us,
+             ";".join(f"{k}={v}" for k, v in metrics.items()))
+        out[name] = metrics
+        reps[tag] = rep
+
+    # the robustness contract, asserted in-module so a metastable
+    # collapse fails CI even on the first run (no baseline needed)
+    rep1, rep5 = reps["1x"], reps[f"{OVERLOAD_SCALE:.0f}x"]
+    assert rep1.non_terminal == 0 and rep5.non_terminal == 0, \
+        f"overload runs leaked non-terminal requests: " \
+        f"1x={rep1.non_terminal} 5x={rep5.non_terminal}"
+    retention = rep5.goodput_rps / rep1.goodput_rps \
+        if rep1.goodput_rps else 0.0
+    assert retention >= OVERLOAD_RETENTION, \
+        f"5x goodput {rep5.goodput_rps} retains only " \
+        f"{retention:.3f} of 1x {rep1.goodput_rps} " \
+        f"(floor {OVERLOAD_RETENTION})"
+    high = rep5.slo_attainment_by_priority.get("1", 0.0)
+    assert high >= OVERLOAD_HIGH_FLOOR, \
+        f"high-priority SLO attainment {high} under 5x overload " \
+        f"(floor {OVERLOAD_HIGH_FLOOR})"
     return out
 
 

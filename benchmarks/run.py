@@ -43,11 +43,12 @@ latency percentiles (the ``serve/latency-*`` rows' ``*_ms_p50`` /
 ``*_ms_p99`` metrics) gate the increase direction instead: they fail
 only past ``GATE_LATENCY_RATIO`` x baseline above an absolute
 ``GATE_LATENCY_FLOOR_MS``.  The ``loadgen/*`` rows add two more rules:
-``slo_attainment`` (a fraction in [0, 1]) fails on an *absolute* drop
-of more than ``GATE_SLO_DROP``, and ``sustainable_rps`` (the bisected
-max sustainable offered rate, deterministic on the virtual clock)
-fails like the structural ratios when it collapses by more than
-``GATE_THRESHOLD``.  ``--gate``
+``slo_attainment`` and ``high_slo_attainment`` (fractions in [0, 1])
+fail on an *absolute* drop of more than ``GATE_SLO_DROP``, and
+``sustainable_rps`` / ``goodput_rps`` (the bisected max sustainable
+offered rate and the overload rows' SLO-meeting serve rate, both
+deterministic on the virtual clock) fail like the structural ratios
+when they collapse by more than ``GATE_THRESHOLD``.  ``--gate``
 without ``--json``, or without a loadable committed baseline, is a
 configuration error (exit 2), never a silent pass.  Without ``--gate``,
 regressions are printed as warnings only.
@@ -137,10 +138,13 @@ def check_regressions(baseline: dict, rows: dict,
     host-speed noise on a ~1-2 ms percentile never gates, but a
     serving step that started recompiling or blocking does.
 
-    ``slo_attainment`` fails on an absolute drop past ``GATE_SLO_DROP``
-    and ``sustainable_rps`` on a relative collapse past ``threshold``;
-    both are deterministic on the virtual clock, so neither needs a
-    noise allowance beyond the thresholds themselves.
+    ``slo_attainment`` and ``high_slo_attainment`` (the high-priority
+    class on the overload rows) fail on an absolute drop past
+    ``GATE_SLO_DROP``; ``sustainable_rps`` and ``goodput_rps`` (the
+    SLO-meeting serve rate under the overload storm) fail on a
+    relative collapse past ``threshold``; all are deterministic on the
+    virtual clock, so none needs a noise allowance beyond the
+    thresholds themselves.
     """
     msgs = []
     for name in sorted(set(baseline) & set(rows)):
@@ -151,13 +155,22 @@ def check_regressions(baseline: dict, rows: dict,
             msgs.append(
                 f"{name}: slo_attainment {ov:.4f} -> {nv:.4f} "
                 f"(gate is an absolute -{GATE_SLO_DROP})")
-        ov, nv = old.get("sustainable_rps"), new.get("sustainable_rps")
+        ov, nv = old.get("high_slo_attainment"), \
+            new.get("high_slo_attainment")
         if (isinstance(ov, (int, float)) and isinstance(nv, (int, float))
-                and ov > 0 and nv < ov * (1.0 - threshold)):
+                and nv < ov - GATE_SLO_DROP):
             msgs.append(
-                f"{name}: sustainable_rps {ov:.0f} -> {nv:.0f} "
-                f"({(nv / ov - 1.0) * 100:+.0f}%, gate is "
-                f"-{threshold * 100:.0f}%)")
+                f"{name}: high_slo_attainment {ov:.4f} -> {nv:.4f} "
+                f"(gate is an absolute -{GATE_SLO_DROP})")
+        for rate_key in ("sustainable_rps", "goodput_rps"):
+            ov, nv = old.get(rate_key), new.get(rate_key)
+            if (isinstance(ov, (int, float))
+                    and isinstance(nv, (int, float))
+                    and ov > 0 and nv < ov * (1.0 - threshold)):
+                msgs.append(
+                    f"{name}: {rate_key} {ov:.0f} -> {nv:.0f} "
+                    f"({(nv / ov - 1.0) * 100:+.0f}%, gate is "
+                    f"-{threshold * 100:.0f}%)")
         for metric in _GATED_METRICS:
             ov, nv = old.get(metric), new.get(metric)
             if not (isinstance(ov, (int, float))

@@ -21,11 +21,20 @@ a virtual clock whose serving steps cost a modeled
 any host.  ``--mode wall`` measures real kernel time on the same
 virtual arrival axis (idle gaps skipped, never slept).
 
+``--overload`` attaches the adaptive overload controller
+(:func:`repro.serving.overload.storm_policy` scaled to the stream's
+recorded 1x rate), ``--scale F`` time-compresses a recorded trace to
+``F``x its offered rate, and ``--slowdown-p/-factor/-steps`` arm a
+seeded service-time-inflation storm — together the replayable overload
+experiment the ``loadgen/overload-*`` bench rows gate.
+
     python -m repro.launch.loadgen --rate 20000 --n 50000 --check
     python -m repro.launch.loadgen --record traces/smoke.json --compact
     python -m repro.launch.loadgen --trace traces/smoke.json \
         --slo-floor 0.9 --hist-out hist.json
     python -m repro.launch.loadgen --sweep 1000 64000
+    python -m repro.launch.loadgen --trace traces/overload_50k.json \
+        --scale 5 --overload --slowdown-p 0.02 --check
 """
 
 from __future__ import annotations
@@ -50,6 +59,8 @@ def _build_specs(args):
     workload = WorkloadSpec(n_inputs=args.inputs,
                             p_intensity=args.p_intensity,
                             t_choices=tuple(args.t_choices),
+                            priority_choices=tuple(args.priority_choices),
+                            priority_weights=tuple(args.priority_weights),
                             deadline_choices=deadline_choices,
                             deadline_weights=deadline_weights,
                             seed=args.workload_seed)
@@ -73,26 +84,41 @@ def _make_engine(args, workload, mode: str):
         base_ms=args.model_base_ms, per_slot_ms=args.model_slot_ms,
         per_cycle_ms=args.model_cycle_ms))
     injector = _make_injector(args)
+    overload = None
+    if getattr(args, "overload", False):
+        from repro.serving.overload import storm_policy
+
+        overload = storm_policy(args.overload_base_rps)
     return SNNServingEngine(weights, plan, policy=policy, clock=clock,
                             on_launch=injector,
                             journal_dir=getattr(args, "journal_dir", None),
                             snapshot_every=getattr(args, "snapshot_every",
-                                                   256))
+                                                   256),
+                            overload=overload)
 
 
 def _make_injector(args):
-    """A crash-point injector when one is armed (chaos children), else
-    None — a journal-less or clean run never consults a hook."""
+    """A fault injector when a crash point or a slowdown storm is
+    armed, else None — a clean run never consults a hook."""
     point = getattr(args, "crash_point", None)
-    if not point or point == "none":
+    crash = bool(point) and point != "none"
+    slowdown = getattr(args, "slowdown_p", 0.0) > 0.0
+    if not crash and not slowdown:
         return None
     from repro.serving.faults import FaultInjector, FaultSpec
 
-    field = {"before_dispatch": "p_crash_before_dispatch",
-             "after_serve": "p_crash_after_serve_before_journal",
-             "mid_snapshot": "p_crash_mid_snapshot"}[point]
-    return FaultInjector(FaultSpec(seed=args.crash_seed,
-                                   **{field: args.crash_p}))
+    fields = {}
+    if crash:
+        fields[{"before_dispatch": "p_crash_before_dispatch",
+                "after_serve": "p_crash_after_serve_before_journal",
+                "mid_snapshot": "p_crash_mid_snapshot"}[point]] = \
+            args.crash_p
+    if slowdown:
+        fields.update(p_slowdown=args.slowdown_p,
+                      slowdown_factor=args.slowdown_factor,
+                      slowdown_steps=args.slowdown_steps)
+    seed = args.crash_seed if crash else getattr(args, "fault_seed", 0)
+    return FaultInjector(FaultSpec(seed=seed, **fields))
 
 
 def _run_once(args, workload, rows):
@@ -156,6 +182,12 @@ def main(argv=None) -> None:
                     help="fraction of requests carrying an explicit "
                          "deadline")
     ap.add_argument("--deadline-ms", type=float, default=40.0)
+    ap.add_argument("--priority-choices", type=int, nargs="+",
+                    default=[0],
+                    help="priority levels in the request mix")
+    ap.add_argument("--priority-weights", type=int, nargs="+",
+                    default=[1],
+                    help="integer weights matching --priority-choices")
     ap.add_argument("--workload-seed", type=int, default=9)
     # engine shape
     ap.add_argument("--neurons", type=int, default=64)
@@ -213,6 +245,26 @@ def main(argv=None) -> None:
     ap.add_argument("--report-out", default=None,
                     help="write the full run report (incl. cumulative "
                          "engine totals) as JSON here")
+    # overload control + storms
+    ap.add_argument("--overload", action="store_true",
+                    help="attach the adaptive overload controller "
+                         "(storm_policy scaled to --overload-base-rps)")
+    ap.add_argument("--overload-base-rps", type=float, default=None,
+                    help="the ~sustainable 1x rate the controller is "
+                         "scaled to (default: the trace's recorded "
+                         "rate, else --rate)")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="time-compress the stream: divide every "
+                         "arrival timestamp by this factor (5 = the "
+                         "same requests at 5x the offered rate)")
+    ap.add_argument("--slowdown-p", type=float, default=0.0,
+                    help="P[a serving step starts a seeded slowdown "
+                         "burst] (service-time inflation storm)")
+    ap.add_argument("--slowdown-factor", type=float, default=4.0)
+    ap.add_argument("--slowdown-steps", type=int, default=1)
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="fault-injector seed when no crash point is "
+                         "armed")
     args = ap.parse_args(argv)
 
     from repro.loadgen import generate_rows, read_trace, write_trace
@@ -240,6 +292,17 @@ def main(argv=None) -> None:
 
     if rows is None:
         rows = generate_rows(arrivals, workload)
+    if args.scale != 1.0:
+        from repro.loadgen import scale_rows
+
+        rows = scale_rows(rows, args.scale)
+        print(f"loadgen: stream time-compressed {args.scale}x "
+              f"(offered rate scaled accordingly)")
+    if args.overload and args.overload_base_rps is None:
+        # the controller is scaled to the stream's *recorded* 1x rate,
+        # not the post---scale offered rate: a 5x storm must descend
+        # toward the sustainable rate, not adopt the storm as baseline
+        args.overload_base_rps = float(arrivals.rate_rps)
 
     if args.sweep is not None:
         if args.trace is not None:

@@ -166,7 +166,10 @@ def _serve_snn(args) -> None:
         if injector is not None:
             stats.update(injector.stats())
         print("serve-bench: " + " ".join(
-            f"{k}={v}" for k, v in sorted(stats.items())))
+            # list-valued stats (breaker states) join without spaces so
+            # the k=v line stays whitespace-splittable
+            f"{k}={'/'.join(map(str, v)) if isinstance(v, list) else v}"
+            for k, v in sorted(stats.items())))
     if non_terminal or mismatches or version_bad or gain_bad:
         sys.exit(1)
 
@@ -305,6 +308,99 @@ def _chaos_snn(args) -> None:
           "crash-free replay")
 
 
+def _overload_storm_snn(args) -> None:
+    """Replayable overload-storm smoke for the adaptive overload
+    controller.
+
+    Replays the committed priority-mixed trace
+    (``benchmarks/traces/overload_50k.json``) three times on the
+    virtual clock, every run with :func:`storm_policy` attached and a
+    seeded service-time-inflation storm (``--overload-seed``): once at
+    the recorded 1x rate (the capacity-sagged goodput anchor) and
+    twice time-compressed to ``--overload-scale`` x (the storm, run
+    twice to prove bit-identical replay).  Exits nonzero when any of
+    the robustness contract fails:
+
+    * any request non-terminal in any run;
+    * storm goodput below 80% of the 1x anchor (metastable collapse);
+    * high-priority SLO attainment below 0.95 under the storm
+      (shedding leaked onto the protected class);
+    * the two same-seed storm runs diverge anywhere in the report or
+      the overload counters (lost determinism).
+    """
+    import sys
+
+    from repro.core.stdp import init_weights
+    from repro.engine.plan import SNNEnginePlan
+    from repro.loadgen import WorkloadSpec, read_trace, scale_rows
+    from repro.loadgen.runner import ServiceModel, VirtualClock, run_rows
+    from repro.serving import (FaultInjector, FaultSpec, SNNServingEngine,
+                               SNNServingPolicy)
+    from repro.serving.overload import storm_policy
+
+    trace = args.trace or "benchmarks/traces/overload_50k.json"
+    header, rows = read_trace(trace)
+    workload = WorkloadSpec.from_dict(header["workload"])
+    base_rps = float(header["arrivals"]["rate_rps"])
+
+    def run_once(scale: float):
+        plan = SNNEnginePlan(threshold=192, leak=16,
+                             n_syn=workload.n_inputs, encode="kernel",
+                             cycle_backend="window", max_batch=32,
+                             t_chunk=8)
+        weights = init_weights(64, workload.words, density_seed=0)
+        eng = SNNServingEngine(
+            weights, plan,
+            policy=SNNServingPolicy(max_queue=4096, deadline_ms=200.0),
+            clock=VirtualClock(ServiceModel()),
+            on_launch=FaultInjector(FaultSpec(
+                p_slowdown=0.02, slowdown_factor=3.0, slowdown_steps=6,
+                seed=args.overload_seed)),
+            overload=storm_policy(base_rps))
+        r = rows if scale == 1.0 else scale_rows(rows, scale)
+        rep = run_rows(eng, workload, r, slo_ms=50.0)
+        keys = ("shed_admission", "shed_low_priority", "shed_codel",
+                "retries_denied", "admit_rate_rps", "codel_entries",
+                "aimd_md_events", "aimd_ai_events", "breaker_trips")
+        return rep, {k: eng.stats()[k] for k in keys}
+
+    rep1, _ = run_once(1.0)
+    rep5a, st5a = run_once(args.overload_scale)
+    rep5b, st5b = run_once(args.overload_scale)
+    high = rep5a.slo_attainment_by_priority.get("1", 0.0)
+    retention = (rep5a.goodput_rps / rep1.goodput_rps
+                 if rep1.goodput_rps else 0.0)
+    print(f"overload-storm: seed={args.overload_seed} "
+          f"scale={args.overload_scale:g}x base={base_rps:.0f}rps")
+    print(f"  1x anchor: goodput={rep1.goodput_rps:.0f}rps "
+          f"high_slo={rep1.slo_attainment_by_priority.get('1', 0.0)}")
+    print(f"  storm:     goodput={rep5a.goodput_rps:.0f}rps "
+          f"(retention {retention:.3f}) high_slo={high} "
+          f"shed={st5a['shed_admission']}+{st5a['shed_low_priority']}"
+          f"+{st5a['shed_codel']}")
+    violations = []
+    for label, rep in (("1x", rep1), ("storm-a", rep5a),
+                       ("storm-b", rep5b)):
+        if rep.non_terminal:
+            violations.append(f"{label}: {rep.non_terminal} "
+                              f"non-terminal requests")
+    if retention < 0.8:
+        violations.append(f"goodput collapsed: storm retains "
+                          f"{retention:.3f} of the 1x anchor (< 0.8)")
+    if high < 0.95:
+        violations.append(f"high-priority SLO attainment {high} "
+                          f"under the storm (< 0.95)")
+    if rep5a.to_dict() != rep5b.to_dict() or st5a != st5b:
+        violations.append("same-seed storm runs diverged "
+                          "(determinism lost)")
+    if violations:
+        for v in violations:
+            print(f"overload-storm: VIOLATION — {v}")
+        sys.exit(1)
+    print("overload-storm: ok — every request terminal, goodput held, "
+          "high-priority SLO protected, replay bit-identical")
+
+
 def main() -> None:
     """CLI launcher: serve any assigned architecture (reduced size on
     CPU) with the continuous-batching engine, or the paper's SNN through
@@ -366,11 +462,27 @@ def main() -> None:
                     help="induced crashes before the clean final run "
                          "(rotates through the 3 injection points)")
     ap.add_argument("--trace", default=None,
-                    help="loadgen trace the chaos harness replays "
-                         "(default: benchmarks/traces/smoke_50k.json)")
+                    help="loadgen trace the chaos/overload harnesses "
+                         "replay (defaults: smoke_50k.json for chaos, "
+                         "overload_50k.json for the overload storm)")
+    ap.add_argument("--overload-storm", action="store_true",
+                    help="replayable overload smoke: storm_policy + "
+                         "seeded service-time inflation over the "
+                         "committed trace at 1x and --overload-scale x, "
+                         "run twice for bit-identical replay; exits "
+                         "nonzero on goodput collapse, high-priority "
+                         "SLO loss, non-terminal requests, or "
+                         "divergence (wenquxing-snn only)")
+    ap.add_argument("--overload-seed", type=int, default=5,
+                    help="seed for the overload storm's service-time "
+                         "inflation draws")
+    ap.add_argument("--overload-scale", type=float, default=5.0,
+                    help="time-compression factor for the storm runs")
     args = ap.parse_args()
 
     if args.arch == "wenquxing-snn":
+        if args.overload_storm:
+            return _overload_storm_snn(args)
         if args.chaos:
             return _chaos_snn(args)
         return _serve_snn(args)

@@ -19,7 +19,8 @@ it.
 from repro.loadgen.arrivals import ArrivalSpec, timestamps, u01, u64
 from repro.loadgen.histogram import LatencyHistogram
 from repro.loadgen.trace import (TraceError, generate_rows, read_trace,
-                                 stream_sha, verify_payloads, write_trace)
+                                 scale_rows, stream_sha, verify_payloads,
+                                 write_trace)
 from repro.loadgen.workload import WorkloadSpec, u64_stream
 
 _RUNNER_SYMBOLS = ("LoadReport", "PacedWallClock", "ServiceModel",
@@ -28,8 +29,8 @@ _RUNNER_SYMBOLS = ("LoadReport", "PacedWallClock", "ServiceModel",
 __all__ = [
     "ArrivalSpec", "timestamps", "u01", "u64",
     "LatencyHistogram",
-    "TraceError", "generate_rows", "read_trace", "stream_sha",
-    "verify_payloads", "write_trace",
+    "TraceError", "generate_rows", "read_trace", "scale_rows",
+    "stream_sha", "verify_payloads", "write_trace",
     "WorkloadSpec", "u64_stream",
     *_RUNNER_SYMBOLS,
 ]

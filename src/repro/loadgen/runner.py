@@ -78,8 +78,15 @@ class VirtualClock:
     def skip_to(self, ts_ms: float) -> None:
         self._now = max(self._now, ts_ms)
 
-    def advance_service_ms(self, batch_size: int, t_pad: int) -> None:
-        self._now += self.model.cost_ms(batch_size, t_pad)
+    def advance_service_ms(self, batch_size: int, t_pad: int,
+                           inflation: float = 1.0) -> None:
+        # `inflation` is the fault injector's slowdown multiplier — an
+        # overload storm sags modeled capacity without failing launches
+        self._now += self.model.cost_ms(batch_size, t_pad) * inflation
+
+    def advance_ms(self, ms: float) -> None:
+        """Charge a non-launch delay (retry backoff) to virtual time."""
+        self._now += max(0.0, ms)
 
 
 class PacedWallClock:
@@ -98,8 +105,15 @@ class PacedWallClock:
         if gap > 0:
             self._offset += gap
 
-    def advance_service_ms(self, batch_size: int, t_pad: int) -> None:
+    def advance_service_ms(self, batch_size: int, t_pad: int,
+                           inflation: float = 1.0) -> None:
         pass    # wall time advanced by itself during the launch
+
+    def advance_ms(self, ms: float) -> None:
+        """Charge a retry-backoff delay to the virtual axis instead of
+        sleeping through it — the backoff shows up in latency without
+        stalling the harness."""
+        self._offset += max(0.0, ms)
 
 
 def make_clock(mode: str, model: ServiceModel | None = None):
@@ -125,6 +139,8 @@ class LoadReport:
     achieved_rps: float           # served / duration
     slo_ms: float
     slo_attainment: float
+    goodput_rps: float            # SLO-meeting serves / duration
+    slo_attainment_by_priority: dict  # str(priority) -> attainment
     e2e_ms_p50: float
     e2e_ms_p99: float
     e2e_ms_p999: float
@@ -215,14 +231,19 @@ def run_rows(engine: SNNServingEngine, workload: WorkloadSpec,
     per_status: dict[str, int] = {}
     non_terminal = 0
     slo_met = 0
+    prio_offered: dict[str, int] = {}
+    prio_met: dict[str, int] = {}
     for r in reqs:
         per_status[r.status] = per_status.get(r.status, 0) + 1
         if not r.terminal:
             non_terminal += 1
         target = r.deadline_ms if r.deadline_ms is not None else slo_ms
+        pk = str(r.priority)
+        prio_offered[pk] = prio_offered.get(pk, 0) + 1
         if (r.status == SERVED and r.service_ms is not None
                 and r.service_ms <= target):
             slo_met += 1
+            prio_met[pk] = prio_met.get(pk, 0) + 1
     span_ms = max((rows[-1]["ts"] - first_ts) if n > 1 else 0.0, 1e-6)
     duration_ms = max(end_ms - first_ts, 1e-6)
     served = per_status.get(SERVED, 0)
@@ -236,6 +257,10 @@ def run_rows(engine: SNNServingEngine, workload: WorkloadSpec,
         achieved_rps=_round3(served / duration_ms * 1e3),
         slo_ms=slo_ms,
         slo_attainment=round(slo_met / max(n, 1), 4),
+        goodput_rps=_round3(slo_met / duration_ms * 1e3),
+        slo_attainment_by_priority={
+            pk: round(prio_met.get(pk, 0) / cnt, 4)
+            for pk, cnt in sorted(prio_offered.items())},
         e2e_ms_p50=_round3(engine.service_hist.percentile(50)),
         e2e_ms_p99=_round3(engine.service_hist.percentile(99)),
         e2e_ms_p999=_round3(engine.service_hist.percentile(99.9)),

@@ -9,7 +9,10 @@ probe-gated promotion, checkpointed rollback), a deterministic
 fault injection harness (:mod:`repro.serving.faults`), and a
 crash-consistency layer (:mod:`repro.serving.journal` — fsync'd
 CRC-framed request WAL, engine-state snapshots, exactly-once terminal
-ledger, snapshot+tail recovery on construction).
+ledger, snapshot+tail recovery on construction), and adaptive overload
+control (:mod:`repro.serving.overload` — CoDel sojourn management,
+AIMD admission, priority-aware shedding, a global retry budget, and
+per-rung circuit breakers over the degradation ladder).
 """
 
 from repro.serving.engine import Request, ServingEngine
@@ -17,6 +20,8 @@ from repro.serving.faults import (CRASH_EXIT_CODE, FaultInjectedError,
                                   FaultInjector, FaultSpec)
 from repro.serving.journal import (JournalError, RequestJournal, RingLog,
                                    replay)
+from repro.serving.overload import (LadderBreakers, OverloadController,
+                                    OverloadPolicy, storm_policy)
 from repro.serving.snn import (SNNRequest, SNNServingEngine,
                                SNNServingPolicy, TERMINAL_STATUSES,
                                degradation_ladder)
@@ -30,6 +35,8 @@ __all__ = [
     "TERMINAL_STATUSES", "degradation_ladder",
     "CRASH_EXIT_CODE", "FaultInjectedError", "FaultInjector", "FaultSpec",
     "JournalError", "RequestJournal", "RingLog", "replay",
+    "LadderBreakers", "OverloadController", "OverloadPolicy",
+    "storm_policy",
     "SNNRefreshPolicy", "SNNWeightRefresher", "VersionedWeightStore",
     "WeightVersion", "weight_fingerprint",
 ]

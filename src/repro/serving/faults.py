@@ -23,6 +23,16 @@ seeded ``numpy`` generator, so storms replay bit-identically — may
 The engine never hooks its ``kind="fallback"`` oracle re-serves, so an
 injector can never corrupt the path that repairs its own damage.
 
+Overload storms add a *slowdown* channel, consulted through the
+separate :meth:`FaultInjector.service_inflation` method once per
+serving step: with ``p_slowdown`` a seeded burst of ``slowdown_steps``
+consecutive steps each cost ``slowdown_factor``x modeled service time
+(the virtual clock multiplies its step charge), sagging capacity
+without any launch failing — the load shape the adaptive admission
+controller exists to absorb.  The method draws from the same generator
+but only when ``p_slowdown > 0``, so legacy storm recipes replay
+bit-identically.
+
 Versioned train-while-serving adds two hooked call kinds with their own
 fault families (drawn from the same generator, but only when those
 calls happen — a storm with no refresher replays bit-identically with
@@ -98,13 +108,17 @@ class FaultSpec:
     p_crash_before_dispatch: float = 0.0        # post-WAL-sync, pre-launch
     p_crash_after_serve_before_journal: float = 0.0  # pre-TERMINAL write
     p_crash_mid_snapshot: float = 0.0           # tmp written, pre-rename
+    # --- service-time inflation (overload storms) -----------------------
+    p_slowdown: float = 0.0       # P[a serving step starts a slow burst]
+    slowdown_factor: float = 4.0  # modeled service-cost multiplier
+    slowdown_steps: int = 1       # consecutive inflated steps per burst
 
     def __post_init__(self):
         for name in ("p_launch_error", "p_corrupt", "p_stall",
                      "p_refresh_corrupt", "p_refresh_stall",
                      "p_save_crash", "p_crash_before_dispatch",
                      "p_crash_after_serve_before_journal",
-                     "p_crash_mid_snapshot"):
+                     "p_crash_mid_snapshot", "p_slowdown"):
             p = getattr(self, name)
             if not 0.0 <= p <= 1.0:
                 raise ValueError(f"{name} must be in [0, 1], got {p}")
@@ -116,6 +130,12 @@ class FaultSpec:
         if self.refresh_stall_ms < 0:
             raise ValueError(f"refresh_stall_ms must be >= 0, got "
                              f"{self.refresh_stall_ms}")
+        if self.slowdown_factor < 1.0:
+            raise ValueError(f"slowdown_factor must be >= 1, got "
+                             f"{self.slowdown_factor}")
+        if self.slowdown_steps < 1:
+            raise ValueError(f"slowdown_steps must be >= 1, got "
+                             f"{self.slowdown_steps}")
 
 
 class FaultInjector:
@@ -144,6 +164,8 @@ class FaultInjector:
         self.save_crashes = 0
         self.crashes = 0
         self._burst_left = 0
+        self.slowdowns = 0
+        self._slow_left = 0
 
     _CRASH_P = {
         "crash_before_dispatch": "p_crash_before_dispatch",
@@ -214,6 +236,26 @@ class FaultInjector:
             return corrupt
         return None
 
+    def service_inflation(self, ctx: dict) -> float:
+        """Service-time multiplier for one serving step (the overload
+        storm's slowdown channel): with ``p_slowdown`` a burst of
+        ``slowdown_steps`` consecutive steps each cost
+        ``slowdown_factor``x modeled time — capacity sags without any
+        launch failing, exactly the overload the admission controller
+        must absorb.  Draws only when armed (``p_slowdown > 0``), so
+        legacy storms replay bit-identically."""
+        sp = self.spec
+        if sp.p_slowdown <= 0.0:
+            return 1.0
+        if self._slow_left > 0:
+            self._slow_left -= 1
+            return sp.slowdown_factor
+        if self.rng.random() < sp.p_slowdown:
+            self.slowdowns += 1
+            self._slow_left = sp.slowdown_steps - 1
+            return sp.slowdown_factor
+        return 1.0
+
     def stats(self) -> dict:
         """Injection counters (for bench reports and storm tests)."""
         return {"fault_launches": self.launches,
@@ -223,4 +265,5 @@ class FaultInjector:
                 "fault_refresh_corruptions": self.refresh_corruptions,
                 "fault_refresh_stalls": self.refresh_stalls,
                 "fault_save_crashes": self.save_crashes,
-                "fault_crashes": self.crashes}
+                "fault_crashes": self.crashes,
+                "fault_slowdowns": self.slowdowns}

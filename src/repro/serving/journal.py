@@ -198,6 +198,8 @@ class RecoveredState:
     deg_dropped: int
     level: int                     # degradation rung at snapshot time
     snapshotted: bool              # a complete snapshot existed
+    overload: dict | None = None   # OverloadController.state_dict()
+    breakers: list | None = None   # per-rung circuit-breaker states
 
     @property
     def resume_offset(self) -> int:
@@ -213,10 +215,18 @@ _COUNTER_KEYS = (
     "canary_failures", "healthy_steps", "refresh_runs",
     "refresh_rejected", "refresh_corrupt", "refresh_timeouts",
     "refresh_failed", "version_violations",
+    "shed_admission", "shed_low_priority", "shed_codel",
+    "retries_denied",
 )
 
 _STATUS_COUNTER = {"SERVED": "windows_served", "REJECTED": "rejected",
                    "EXPIRED": "expired", "FAILED": "failed"}
+
+# TERMINAL records tag overload sheds so tail replay re-attributes the
+# shed counters exactly; tags from a future schema are ignored (the
+# status counter above still advances)
+_SHED_COUNTER = {"adm": "shed_admission", "lowprio": "shed_low_priority",
+                 "codel": "shed_codel"}
 
 
 def replay(snapshot: dict | None, tail: list[dict]) -> RecoveredState:
@@ -245,8 +255,12 @@ def replay(snapshot: dict | None, tail: list[dict]) -> RecoveredState:
     deg_dropped = 0
     level = 0
     if snapshot is not None:
-        for k in _COUNTER_KEYS:
-            counters[k] = int(snapshot["counters"].get(k, 0))
+        # adopt every snapshot counter, known or not: unknown keys come
+        # from a different schema generation (an older engine reading a
+        # newer snapshot, or vice versa) and are preserved-and-ignored
+        # rather than breaking replay
+        for k, v in snapshot["counters"].items():
+            counters[k] = int(v)
         if snapshot.get("qw_hist"):
             qw = LatencyHistogram.from_dict(snapshot["qw_hist"])
         if snapshot.get("sv_hist"):
@@ -285,6 +299,9 @@ def replay(snapshot: dict | None, tail: list[dict]) -> RecoveredState:
                 raise JournalError(
                     f"rid {rid}: unknown terminal status {status!r}")
             counters[key] += 1
+            shed_key = _SHED_COUNTER.get(ev.get("shed"))
+            if shed_key is not None:
+                counters[shed_key] += 1
             if status == "SERVED":
                 if ev.get("qw") is not None:
                     qw.record(float(ev["qw"]))
@@ -321,7 +338,9 @@ def replay(snapshot: dict | None, tail: list[dict]) -> RecoveredState:
         weight_version=weight_version, clock_ms=clock_ms,
         t_first_ms=t_first, t_last_ms=t_last, deg_events=deg_events,
         deg_dropped=deg_dropped, level=level,
-        snapshotted=snapshot is not None)
+        snapshotted=snapshot is not None,
+        overload=(snapshot or {}).get("overload"),
+        breakers=(snapshot or {}).get("breakers"))
 
 
 class RequestJournal:

@@ -136,6 +136,63 @@ flat at millions of requests and ``stats()`` percentiles are O(buckets),
 while staying nearest-rank-compatible with the committed
 ``serve/latency-*`` gate rows.
 
+Overload model
+--------------
+
+The static defenses above (bounded queue, deadlines, per-request
+retries) keep overload *correct* but not *productive*: sustained
+offered load past capacity pins the queue at ``max_queue`` and every
+admitted request ages toward its deadline while being served — goodput
+collapses into expiry churn (the metastable failure mode).  Passing
+``overload=OverloadPolicy(...)`` attaches an
+:class:`repro.serving.overload.OverloadController` that keeps the
+pipeline productive through sustained overload.  Its state machine and
+shedding order, in pipeline position:
+
+1. **AIMD admission** (``submit()``): a token bucket refilled at an
+   adaptive ``admit_rate`` sheds excess arrivals at the front door
+   (status ``REJECTED``, tagged ``shed="adm"``) — the cheapest place
+   to say no.  Every ``interval_ms`` the rate multiplicatively
+   decreases if the interval saw congestion (CoDel dropping or a
+   served latency over ``slo_ms``) and additively increases otherwise;
+   bucket exhaustion alone never counts as congestion, which is how
+   the rate probes up to capacity.
+2. **Priority-aware shed** (``submit()``): low-priority requests
+   (``priority < high_priority``) additionally shed probabilistically
+   as queue occupancy rises (RED-style ramp, tagged ``"lowprio"``, a
+   stateless counter-hash draw) and must leave ``high_reserve``
+   admission tokens for the high class.  Under overload the shed mass
+   concentrates on the low class, holding high-priority SLO
+   attainment.
+3. **CoDel drop-at-dequeue** (``_form_batch``): the controller tracks
+   the *standing-queue* sojourn — the age of the oldest queued
+   request, which in a priority queue is the lingering low-priority
+   tail; when it stays above ``target_sojourn_ms`` for a full
+   ``interval_ms`` the controller
+   enters its *dropping* state and batch formation sheds queued
+   low-priority requests (status ``EXPIRED``, tagged ``"codel"``) —
+   the ``interval/sqrt(n)`` control law plus everything older than the
+   sojourn ceiling — instead of serving requests into certain SLO
+   misses.  High-priority requests are never CoDel-shed.
+4. **Global retry budget** (``_launch_with_recovery``): retries draw
+   from one bucket (``retry_budget`` tokens at ``retry_refill_per_s``)
+   so correlated fault bursts cannot amplify into retry storms;
+   denials count ``retries_denied`` and fail the batch fast.
+
+The degradation ladder doubles as explicit **circuit breakers**
+(:class:`repro.serving.overload.LadderBreakers`): rung R's breaker
+*opens* when the engine degrades off R, every open breaker goes
+*half-open* at the deterministic reprobe (trial traffic at rung 0),
+and the next fault-free step *closes* the trials.  Breaker states ride
+in ``stats()`` and journal snapshots; the level/healthy-step counters
+remain the behavioral source of truth, so pre-breaker replays are
+bit-identical.
+
+All controller decisions read the engine clock and a stateless
+splitmix64 counter hash — no wall time, no stateful RNG — so
+virtual-clock overload runs replay bit-identically (asserted by the
+``loadgen/overload-*`` bench rows and ``serve --overload-storm``).
+
 Crash consistency
 -----------------
 
@@ -219,6 +276,8 @@ from repro.kernels import ops
 from repro.loadgen.histogram import LatencyHistogram
 from repro.serving.journal import (_COUNTER_KEYS, RequestJournal, RingLog,
                                    replay)
+from repro.serving.overload import (SHED_CODEL, LadderBreakers,
+                                    OverloadController, OverloadPolicy)
 from repro.serving.weights import SNNWeightRefresher, VersionedWeightStore
 
 _T_QUANTUM = 8   # window lengths bucket to multiples of this (or t_chunk)
@@ -259,8 +318,15 @@ class ServingClock:
     def now_ms(self) -> float:
         return _now_ms()
 
-    def advance_service_ms(self, batch_size: int, t_pad: int) -> None:
+    def advance_service_ms(self, batch_size: int, t_pad: int,
+                           inflation: float = 1.0) -> None:
         pass
+
+    def advance_ms(self, ms: float) -> None:
+        """Charge a non-launch delay (retry backoff).  A no-op on the
+        wall clock on purpose: stalling the serving loop in a sleep is
+        exactly the pathology the pluggable clock removes — virtual
+        clocks charge the delay to modeled time instead."""
 
 
 @dataclasses.dataclass
@@ -286,6 +352,7 @@ class SNNRequest:
     served_version: int | None = None   # weight version the counts came from
     trace_row: dict | None = None       # loadgen row (journal descriptor)
     content_sha: str | None = None      # payload content hash (audit key)
+    shed: str | None = None             # overload shed tag (adm/lowprio/codel)
 
     @property
     def terminal(self) -> bool:
@@ -371,7 +438,8 @@ class SNNServingEngine:
                  refresher: SNNWeightRefresher | None = None,
                  state_dir=None, keep_versions: int = 4,
                  clock: ServingClock | None = None,
-                 journal_dir=None, snapshot_every: int = 256):
+                 journal_dir=None, snapshot_every: int = 256,
+                 overload: OverloadPolicy | None = None):
         if plan.threshold < 1:
             raise ValueError("SNN serving requires threshold >= 1 "
                              "(zero-padded cycles must stay silent)")
@@ -419,6 +487,15 @@ class SNNServingEngine:
         self.level = 0              # current degradation rung
         self.healthy_steps = 0      # fault-free steps at this rung
         self.degradation_events = RingLog(cap=_EVENT_RING)
+        # --- overload control (None = static defenses only) -------------
+        self.overload = (OverloadController(overload)
+                         if overload is not None else None)
+        self.breakers = LadderBreakers(len(self._plans))
+        self.shed_admission = 0     # AIMD front-door sheds
+        self.shed_low_priority = 0  # RED occupancy-ramp sheds
+        self.shed_codel = 0         # sojourn-control dequeue drops
+        self.retries_denied = 0     # global retry-budget denials
+        self._foreign_counters: dict[str, int] = {}  # future-schema keys
         self.queue_wait_hist = LatencyHistogram()
         self.service_hist = LatencyHistogram()
         self.submitted = 0          # every submit() call, admitted or not
@@ -498,6 +575,21 @@ class SNNServingEngine:
                                 if req.t_submit_ms is not None
                                 else self.clock.now_ms())
         error = self._validate(req)
+        if error is None and self.overload is not None:
+            ok, tag = self.overload.admit(req.priority, len(self.queue),
+                                          self.policy.max_queue,
+                                          self.clock.now_ms())
+            if not ok:
+                req.shed = tag
+                if tag == "lowprio":
+                    self.shed_low_priority += 1
+                    error = (f"request {req.rid}: low-priority shed at "
+                             "queue occupancy (overload)")
+                else:
+                    self.shed_admission += 1
+                    error = (f"request {req.rid}: admission rate limit "
+                             f"({self.overload.admit_rate:.0f} rps), "
+                             "overload shed")
         if error is None and self.policy.max_queue is not None \
                 and len(self.queue) >= self.policy.max_queue:
             error = (f"request {req.rid}: queue full "
@@ -530,9 +622,10 @@ class SNNServingEngine:
                 else req.n_steps)
 
     def _form_batch(self) -> tuple[list[SNNRequest], int]:
-        """Expire overdue queued requests, then pull up to ``max_batch``
-        highest-priority-first (stable, so FIFO within a priority).
-        Returns (batch, n_expired)."""
+        """Expire overdue queued requests, consult the overload
+        controller's sojourn law (drop-at-dequeue), then pull up to
+        ``max_batch`` highest-priority-first (stable, so FIFO within a
+        priority).  Returns (batch, n_finished_here)."""
         now = self.clock.now_ms()
         live: list[SNNRequest] = []
         n_expired = 0
@@ -547,6 +640,29 @@ class SNNServingEngine:
             else:
                 live.append(r)
         live.sort(key=lambda r: -r.priority)
+        ov = self.overload
+        if ov is not None and live:
+            sojourn = max(now - r.t_submit_ms for r in live)
+            n_drop = ov.on_dequeue(sojourn, now, len(live))
+            if ov.dropping:
+                # shed low-priority only: everything past the sojourn
+                # ceiling (serving it cannot meet the SLO), oldest
+                # first, plus what the sqrt control law asks for
+                limit = ov.policy.sojourn_limit_ms
+                low = sorted((r for r in live
+                              if r.priority < ov.policy.high_priority),
+                             key=lambda r: r.t_submit_ms)
+                aged = [r for r in low if now - r.t_submit_ms > limit]
+                fresh = [r for r in low if now - r.t_submit_ms <= limit]
+                for r in aged + fresh[:max(0, n_drop - len(aged))]:
+                    r.service_ms = now - r.t_submit_ms
+                    r.shed = SHED_CODEL
+                    self.shed_codel += 1
+                    self._finish(r, EXPIRED,
+                                 f"request {r.rid}: shed at dequeue by "
+                                 "sojourn control (overload)")
+                    n_expired += 1
+                live = [r for r in live if not r.done]
         batch, self.queue = live[:self.plan.max_batch], \
             live[self.plan.max_batch:]
         return batch, n_expired
@@ -604,6 +720,8 @@ class SNNServingEngine:
             rec["sv"] = req.service_ms
         if req.content_sha is not None:
             rec["sha"] = req.content_sha
+        if req.shed is not None:
+            rec["shed"] = req.shed
         if req.error:
             rec["err"] = req.error
         self.journal.append(rec)
@@ -633,9 +751,11 @@ class SNNServingEngine:
                             "t_lens": []})
 
     def _snapshot_state(self) -> dict:
-        return {
-            "counters": {k: int(getattr(self, k))
-                         for k in _COUNTER_KEYS},
+        state = {
+            "counters": {**{k: int(getattr(self, k))
+                            for k in _COUNTER_KEYS},
+                         # keys from a newer schema ride along untouched
+                         **self._foreign_counters},
             "qw_hist": self.queue_wait_hist.to_dict(),
             "sv_hist": self.service_hist.to_dict(),
             "queue": [self._admit_records[r.rid] for r in self.queue
@@ -648,7 +768,12 @@ class SNNServingEngine:
             "deg_events": self.degradation_events.to_list(),
             "deg_dropped": self.degradation_events.dropped,
             "level": self.level,
+            "breakers": self.breakers.states(),
+            "breaker_trips": self.breakers.trips,
         }
+        if self.overload is not None:
+            state["overload"] = self.overload.state_dict()
+        return state
 
     def _requeue_record(self, rec: dict) -> None:
         """Re-materialize one recovered ADMIT record into the queue,
@@ -695,8 +820,18 @@ class SNNServingEngine:
         rec = replay(snapshot, tail)
         if rec.last_rid < 0 and not rec.snapshotted:
             return      # fresh journal directory: nothing to adopt
-        for k in _COUNTER_KEYS:
-            setattr(self, k, rec.counters[k])
+        for k, v in rec.counters.items():
+            if k in _COUNTER_KEYS:
+                setattr(self, k, v)
+            else:
+                # a newer engine's counter: preserve through our own
+                # snapshots rather than break (forward compatibility)
+                self._foreign_counters[k] = v
+        if rec.overload is not None and self.overload is not None:
+            self.overload.load_state(rec.overload)
+        if rec.breakers is not None:
+            self.breakers = LadderBreakers(len(self._plans),
+                                           states=rec.breakers)
         if rec.qw_hist:
             self.queue_wait_hist = LatencyHistogram.from_dict(rec.qw_hist)
         if rec.sv_hist:
@@ -819,6 +954,7 @@ class SNNServingEngine:
         self.level += 1
         self.degraded += 1
         self.healthy_steps = 0
+        self.breakers.open_rung(frm)
         plan = self._plans[self.level]
         self.degradation_events.append({
             "step": self.steps, "from": frm, "to": self.level,
@@ -844,13 +980,21 @@ class SNNServingEngine:
                     self._last_error = f"{type(e).__name__}: {e}"
                     if attempts >= pol.max_retries:
                         break
+                    if (self.overload is not None
+                            and not self.overload.grant_retry(
+                                self.clock.now_ms())):
+                        # global retry budget spent: fail fast instead
+                        # of amplifying a correlated fault burst into a
+                        # retry storm
+                        self.retries_denied += 1
+                        break
                     attempts += 1
                     self.retried += 1
                     for r in batch:
                         r.retries += 1
                     if pol.retry_backoff_ms:
-                        time.sleep(pol.retry_backoff_ms
-                                   * 2 ** (attempts - 1) / 1e3)
+                        self.clock.advance_ms(pol.retry_backoff_ms
+                                              * 2 ** (attempts - 1))
             if pol.degrade_on_failure and self.level < max_level:
                 self._degrade(f"launch failed after {attempts + 1} "
                               f"attempts: {self._last_error}")
@@ -1079,7 +1223,11 @@ class SNNServingEngine:
                                                        t_pad)
         if self.journal is not None:
             self._consult_crash("crash_after_serve")
-        self.clock.advance_service_ms(len(batch), t_pad)
+        infl_fn = getattr(self.on_launch, "service_inflation", None)
+        infl = 1.0 if infl_fn is None else infl_fn(
+            {"step": self.steps, "batch_size": len(batch),
+             "t_pad": t_pad})
+        self.clock.advance_service_ms(len(batch), t_pad, inflation=infl)
         now_ms = self.clock.now_ms()
         self._t_last_ms = now_ms
         for i, r in enumerate(batch):
@@ -1099,6 +1247,8 @@ class SNNServingEngine:
             self.service_hist.record(r.service_ms)
             self._finish(r, SERVED)
             self.windows_served += 1
+            if self.overload is not None:
+                self.overload.note_served(r.service_ms)
         finished += len(batch)
         self.steps += 1
         self.batches += 1
@@ -1116,8 +1266,11 @@ class SNNServingEngine:
                     "kernel_backend": self.plan.kernel_backend,
                     "reason": f"re-probe after {self.healthy_steps} "
                               "healthy steps"})
+                self.breakers.half_open_all()   # trial traffic admitted
                 self.level = 0
                 self.healthy_steps = 0
+            else:
+                self.breakers.close_trials()    # half-open trial passed
         else:
             self.healthy_steps = 0
         if self.journal is not None:
@@ -1200,6 +1353,20 @@ class SNNServingEngine:
             "canary_checks": self.canary_checks,
             "canary_failures": self.canary_failures,
             "level": self.level,
+            # --- overload control ------------------------------------
+            "breaker_states": self.breakers.states(),
+            "breaker_trips": self.breakers.trips,
+            **({"admit_rate_rps": round(self.overload.admit_rate, 1),
+                "shed_admission": self.shed_admission,
+                "shed_low_priority": self.shed_low_priority,
+                "shed_codel": self.shed_codel,
+                "retries_denied": self.retries_denied,
+                "codel_dropping": self.overload.dropping,
+                "codel_entries": self.overload.codel_entries,
+                "aimd_md_events": self.overload.md_events,
+                "aimd_ai_events": self.overload.ai_events,
+                "retry_tokens": round(self.overload.retry_tokens, 2)}
+               if self.overload is not None else {}),
             # --- versioned refresh -----------------------------------
             **self._store.stats(),
             "refresh_runs": self.refresh_runs,

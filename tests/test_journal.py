@@ -16,6 +16,7 @@ what ``kill -9`` at that instant would leave on disk.
 
 import dataclasses
 import json
+from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
@@ -448,3 +449,72 @@ def test_journaled_stats_keys(tmp_path):
                 "version_reconciliations", "telemetry_dropped"):
         assert key in s
     eng.close()
+
+
+# --- snapshot schema compatibility (overload-era counters) ------------------
+
+def _newest_snapshot(jdir):
+    snaps = sorted(Path(jdir).glob("snapshot_*.json"),
+                   key=lambda p: int(p.stem.split("_")[1]))
+    assert snaps, "no complete snapshot written"
+    return snaps[-1]
+
+
+def _rewrite_snapshot(jdir, mutate):
+    path = _newest_snapshot(jdir)
+    state = json.loads(path.read_text())
+    mutate(state)
+    path.write_text(json.dumps(state))
+
+
+def test_pre_overload_schema_snapshot_round_trips(tmp_path):
+    """A snapshot written before the overload-control schema (no shed
+    counters, no breaker states, no controller state) must restore a
+    new engine cleanly: new counters default to zero, everything the
+    old schema did record survives."""
+    jdir = str(tmp_path / "j")
+    eng = _engine(jdir)
+    for i in range(4):
+        eng.submit(_request(i))
+    while eng.queue:
+        eng.step()
+    eng.close()
+
+    def strip_new_schema(state):
+        for k in ("shed_admission", "shed_low_priority", "shed_codel",
+                  "retries_denied"):
+            state["counters"].pop(k, None)
+        state.pop("breakers", None)
+        state.pop("breaker_trips", None)
+        state.pop("overload", None)
+
+    _rewrite_snapshot(jdir, strip_new_schema)
+    eng2 = _engine(jdir)
+    assert eng2.windows_served == 4
+    assert eng2.submitted == 4
+    assert (eng2.shed_admission, eng2.shed_low_priority,
+            eng2.shed_codel, eng2.retries_denied) == (0, 0, 0, 0)
+    assert eng2.breakers.states() == ["closed"] * len(eng2._plans)
+    eng2.close()
+
+
+def test_unknown_snapshot_counters_preserved_through_recovery(tmp_path):
+    """Forward compatibility: counter keys from a *newer* engine ride
+    through an old engine's recover -> snapshot cycle untouched instead
+    of being dropped (so a rollback never erases a newer schema's
+    accounting)."""
+    jdir = str(tmp_path / "j")
+    eng = _engine(jdir)
+    eng.submit(_request(0))
+    eng.step()
+    eng.close()
+
+    _rewrite_snapshot(jdir, lambda s: s["counters"].update(zz_future=7))
+    eng2 = _engine(jdir)             # construction compacts to a new
+    eng2.close()                     # snapshot; close compacts again
+    state = json.loads(_newest_snapshot(jdir).read_text())
+    assert state["counters"]["zz_future"] == 7
+    assert state["counters"]["windows_served"] == 1
+    # the foreign key never leaks into engine attributes or stats
+    assert not hasattr(eng2, "zz_future")
+    assert "zz_future" not in eng2.stats()

@@ -129,6 +129,28 @@ def test_sustainable_rps_gates_on_collapse():
     assert check_regressions(base, ok) == []
 
 
+def test_goodput_rps_gates_on_collapse():
+    base = {"loadgen/overload-5x": {"goodput_rps": 22000.0}}
+    rows = {"loadgen/overload-5x": {
+        "goodput_rps": 22000.0 * (1.0 - GATE_THRESHOLD) * 0.9}}
+    msgs = check_regressions(base, rows)
+    assert len(msgs) == 1 and "goodput_rps" in msgs[0]
+    ok = {"loadgen/overload-5x": {
+        "goodput_rps": 22000.0 * (1.0 - GATE_THRESHOLD + 0.01)}}
+    assert check_regressions(base, ok) == []
+
+
+def test_high_slo_attainment_gates_on_absolute_drop():
+    base = {"loadgen/overload-5x": {"high_slo_attainment": 1.0}}
+    rows = {"loadgen/overload-5x": {
+        "high_slo_attainment": 1.0 - GATE_SLO_DROP - 0.01}}
+    msgs = check_regressions(base, rows)
+    assert len(msgs) == 1 and "high_slo_attainment" in msgs[0]
+    ok = {"loadgen/overload-5x": {
+        "high_slo_attainment": 1.0 - GATE_SLO_DROP + 0.01}}
+    assert check_regressions(base, ok) == []
+
+
 def test_committed_baseline_has_loadgen_rows():
     """The gated loadgen rows (deterministic virtual replay + sweep)
     are committed with coordinated-omission-correct latency metrics."""
